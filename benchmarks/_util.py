@@ -1,0 +1,34 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall microseconds per call (after jit warmup)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"
+
+
+def iters_to_accuracy(history, target: float) -> int:
+    """First iteration index reaching relative objective error <= target
+    (history = per-iteration objective error array); -1 if never."""
+    import numpy as np
+    h = np.asarray(history)
+    hits = np.nonzero(h <= target)[0]
+    return int(hits[0]) + 1 if hits.size else -1

@@ -1,0 +1,53 @@
+"""Figures 8-9: modeled strong/weak scaling of BCD vs CA-BCD on Cori
+(MPI + Spark) with the paper's constants, extended with the TPU v5e machine
+models (DESIGN.md section 2.5).  Paper claims: strong 14x MPI / 165x Spark
+(s = 40 / 600); weak 12x MPI / 396x Spark (s = 25 / 750)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cost_model import (CORI_MPI, CORI_SPARK, TPU_V5E_DCN,
+                                   TPU_V5E_ICI, strong_scaling, weak_scaling)
+
+from ._util import row
+
+PS = [2 ** k for k in range(2, 29)]
+SGRID = [1, 2, 5, 10, 25, 40, 50, 100, 200, 300, 400, 600, 750, 1000]
+
+
+def run() -> list[str]:
+    rows = []
+    H = 1000
+    specs = [
+        ("fig8/strong_mpi", CORI_MPI, dict(d=1024, n=2 ** 35), 14),
+        ("fig8/strong_spark", CORI_SPARK, dict(d=1024, n=2 ** 40), 165),
+    ]
+    for name, machine, kw, claim in specs:
+        out = strong_scaling(machine, b=4, H=H, Ps=PS, s_grid=SGRID, **kw)
+        i = int(np.argmax(out["speedup"]))
+        rows.append(row(name, 0.0,
+                        f"max_speedup={out['speedup'][i]:.1f}x at P=2^"
+                        f"{int(np.log2(out['P'][i]))} s={out['s'][i]} "
+                        f"(paper={claim}x)"))
+    specs = [
+        ("fig9/weak_mpi", CORI_MPI, 12),
+        ("fig9/weak_spark", CORI_SPARK, 396),
+    ]
+    for name, machine, claim in specs:
+        out = weak_scaling(machine, d=1024, n_per_P=2 ** 11, b=4, H=H, Ps=PS,
+                           s_grid=SGRID)
+        i = int(np.argmax(out["speedup"]))
+        rows.append(row(name, 0.0,
+                        f"max_speedup={out['speedup'][i]:.1f}x at P=2^"
+                        f"{int(np.log2(out['P'][i]))} s={out['s'][i]} "
+                        f"(paper={claim}x)"))
+    # TPU extension: the same transformation pays on the DCN (multi-pod) axis
+    for name, machine in (("fig8/strong_tpu_ici", TPU_V5E_ICI),
+                          ("fig8/strong_tpu_dcn", TPU_V5E_DCN)):
+        out = strong_scaling(machine, d=1024, n=2 ** 35, b=4, H=H,
+                             Ps=[2 ** k for k in range(2, 19)], s_grid=SGRID)
+        i = int(np.argmax(out["speedup"]))
+        rows.append(row(name, 0.0,
+                        f"max_speedup={out['speedup'][i]:.1f}x at P=2^"
+                        f"{int(np.log2(out['P'][i]))} s={out['s'][i]}"))
+    return rows

@@ -1,0 +1,47 @@
+"""Gram-kernel micro-benchmark: the paper's BLAS-1/2 -> BLAS-3 insight,
+measured.  s classical b x b Grams vs ONE (sb x sb) Gram over the same data
+(XLA CPU here; the Pallas path targets the TPU MXU with identical tiling)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gram import gram_packet
+
+from ._util import row, timed
+
+
+def run() -> list[str]:
+    rows = []
+    n = 1 << 15
+    b, s = 8, 16
+    key = jax.random.key(0)
+    A_small = [jax.random.normal(jax.random.key(i), (b, n), jnp.float32)
+               for i in range(s)]
+    A_big = jnp.concatenate(A_small, axis=0)          # (sb, n)
+    u = jax.random.normal(key, (n,), jnp.float32)
+
+    @jax.jit
+    def classical(blocks, u):
+        return [gram_packet(Ab, u, scale=1.0 / n, impl="ref")
+                for Ab in blocks]
+
+    @jax.jit
+    def ca(Abig, u):
+        return gram_packet(Abig, u, scale=1.0 / n, impl="ref")
+
+    us_cl = timed(classical, A_small, u)
+    us_ca = timed(ca, A_big, u)
+    rows.append(row("kernels/gram_classical_sx_bxb", us_cl,
+                    f"s={s} b={b} n={n}"))
+    rows.append(row("kernels/gram_ca_one_sbxsb", us_ca,
+                    f"blas3_speedup={us_cl/us_ca:.2f}x"))
+
+    # pallas interpret-mode correctness/latency reference (not a perf number
+    # on CPU -- interpret mode executes the kernel body in Python)
+    us_pi = timed(lambda: gram_packet(A_big[:, :2048], u[:2048],
+                                      scale=1.0 / n, impl="pallas_interpret"),
+                  iters=1)
+    rows.append(row("kernels/gram_pallas_interpret_2k", us_pi,
+                    "correctness-path only (CPU)"))
+    return rows

@@ -1,0 +1,33 @@
+"""Roofline summary rows from the dry-run artifacts (section Roofline of
+EXPERIMENTS.md is generated from the same data via launch/roofline.py)."""
+from __future__ import annotations
+
+import os
+
+from repro.launch.roofline import analyze_cell, load_cells
+
+from ._util import row
+
+ART = os.path.join(os.path.dirname(__file__), os.pardir, "artifacts", "dryrun")
+
+
+def run() -> list[str]:
+    rows = []
+    if not os.path.isdir(ART):
+        return [row("roofline/missing", 0.0,
+                    "run launch/dryrun.py first (artifacts/dryrun)")]
+    cells = load_cells(ART)
+    for (arch, shape, mesh), slots in sorted(cells.items()):
+        if mesh != "single" or "base" not in slots:
+            continue
+        c = analyze_cell(arch, shape, mesh, slots["base"], slots.get("probe"))
+        if c["status"] == "ok":
+            rows.append(row(
+                f"roofline/{arch}_{shape}",
+                max(c["compute_s"], c["memory_s"], c["collective_s"]) * 1e6,
+                f"dominant={c['dominant']} frac={c['roofline_fraction']:.3f} "
+                f"6ND/HLO={c['model_over_hlo']:.3f} "
+                f"hbm={c['hbm_gb_per_device']:.1f}GB"))
+        elif c["status"] == "skipped":
+            rows.append(row(f"roofline/{arch}_{shape}", 0.0, "skipped"))
+    return rows

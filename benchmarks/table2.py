@@ -1,0 +1,76 @@
+"""Table 2 + Figure 1: BCD / BDCD / CG / TSQR compared on one d > n problem
+(news20 stand-in) -- convergence vs flops / bandwidth / latency cost, plus
+measured wall time per solver pass on this container."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (bcd, bdcd, cg_ridge_history, objective, ridge_exact,
+                        tsqr_ridge)
+from repro.core.cost_model import bcd_costs, bdcd_costs, cg_costs, tsqr_costs
+from repro.data import PAPER_DATASETS, make_regression
+
+from ._util import iters_to_accuracy, row, timed
+
+TARGET = 1e-2
+P = 256
+
+
+def run() -> list[str]:
+    jax.config.update("jax_enable_x64", True)
+    spec = PAPER_DATASETS["news20"]  # d > n, like the paper's Figure 1
+    X, y, _ = make_regression(jax.random.key(0), spec)
+    d, n = X.shape
+    lam = 1e-6 * float(jnp.linalg.norm(X) ** 2)
+    w_opt = ridge_exact(X, y, lam)
+    f_opt = float(objective(X, w_opt, y, lam))
+    f_0 = float(objective(X, jnp.zeros((d,), X.dtype), y, lam))
+
+    def rel_obj(objs):
+        return (np.asarray(objs) - f_opt) / max(abs(f_opt), 1e-300)
+
+    rows = []
+    b, bp = 8, 32
+    H = 2000
+    us_bcd = timed(lambda: bcd(X, y, lam, b, 200, jax.random.key(1)), iters=1)
+    res_b = bcd(X, y, lam, b, H, jax.random.key(1), w_ref=w_opt)
+    it_b = iters_to_accuracy(rel_obj(res_b.history["objective"]), TARGET)
+    rows.append(row("table2/bcd", us_bcd / 200,
+                    f"iters_to_1e-2={it_b} "
+                    f"modelF={bcd_costs(d, n, P, b, max(it_b, 1)).flops:.2e} "
+                    f"modelL={bcd_costs(d, n, P, b, max(it_b, 1)).latency:.2e}"))
+
+    us_bd = timed(lambda: bdcd(X, y, lam, bp, 200, jax.random.key(2)), iters=1)
+    res_d = bdcd(X, y, lam, bp, H, jax.random.key(2), w_ref=w_opt)
+    it_d = iters_to_accuracy(rel_obj(res_d.history["objective"]), TARGET)
+    rows.append(row("table2/bdcd", us_bd / 200,
+                    f"iters_to_1e-2={it_d} "
+                    f"modelF={bdcd_costs(d, n, P, bp, max(it_d, 1)).flops:.2e} "
+                    f"modelL={bdcd_costs(d, n, P, bp, max(it_d, 1)).latency:.2e}"))
+
+    us_cg = timed(lambda: cg_ridge_history(X, y, lam, 50), iters=1)
+    res_cg = cg_ridge_history(X, y, lam, 200, w_ref=w_opt)
+    it_cg = iters_to_accuracy(rel_obj(res_cg.history["objective"]), TARGET)
+    rows.append(row("table2/cg", us_cg / 50,
+                    f"iters_to_1e-2={it_cg} "
+                    f"modelF={cg_costs(d, n, P, max(it_cg, 1)).flops:.2e} "
+                    f"modelL={cg_costs(d, n, P, max(it_cg, 1)).latency:.2e}"))
+
+    us_t = timed(lambda: tsqr_ridge(X, y, lam), iters=1)
+    w_t = tsqr_ridge(X, y, lam)
+    err_t = float(jnp.linalg.norm(w_t - w_opt) / jnp.linalg.norm(w_opt))
+    c_t = tsqr_costs(d, n, P)
+    rows.append(row("table2/tsqr", us_t,
+                    f"single_pass_err={err_t:.1e} modelF={c_t.flops:.2e} "
+                    f"modelL={c_t.latency:.2e}"))
+
+    # Figure 1's qualitative claim: coordinate methods need orders of
+    # magnitude more *messages* than CG/TSQR but comparable flops.
+    msg_ratio = (bcd_costs(d, n, P, b, max(it_b, 1)).latency /
+                 max(tsqr_costs(d, n, P).latency, 1))
+    rows.append(row("fig1/messages_bcd_over_tsqr", 0.0, f"ratio={msg_ratio:.1e}"))
+    rows.append(row("fig1/start_rel_obj", 0.0,
+                    f"{(f_0 - f_opt)/abs(f_opt):.3e}"))
+    return rows

@@ -1,0 +1,53 @@
+"""Quickstart: the paper in 60 seconds.
+
+Solves a ridge problem with classical BCD and CA-BCD(s), showing
+  1. identical convergence trajectories (the exact-arithmetic claim), and
+  2. s-fold fewer synchronization points (the latency claim).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import bcd, ca_bcd, ridge_exact, sample_blocks  # noqa: E402
+from repro.data import SyntheticSpec, make_regression  # noqa: E402
+
+
+def main():
+    # A news20-shaped problem: more features than data points, ill-conditioned.
+    X, y, _ = make_regression(jax.random.key(0),
+                              SyntheticSpec("demo", d=512, n=2048, cond=1e6))
+    lam = 1e-6 * float(jnp.linalg.norm(X) ** 2)
+    w_opt = ridge_exact(X, y, lam)
+    print(f"problem: X {X.shape}, lambda={lam:.3e}")
+
+    iters, b, s = 1000, 8, 25
+    idx = sample_blocks(jax.random.key(1), X.shape[0], b, iters)
+
+    res_bcd = bcd(X, y, lam, b, iters, None, idx=idx, w_ref=w_opt)
+    res_ca = ca_bcd(X, y, lam, b, s, iters, None, idx=idx, w_ref=w_opt,
+                    track_cond=True)
+
+    dev = np.max(np.abs(np.asarray(res_ca.history["objective"]) -
+                        np.asarray(res_bcd.history["objective"])))
+    print(f"\nBCD      : {iters} iterations -> {iters} synchronizations")
+    print(f"CA-BCD   : {iters} iterations -> {iters//s} synchronizations "
+          f"(s={s}, one sb x sb Gram each)")
+    print(f"max |objective difference| over the whole trajectory: {dev:.2e}")
+    print(f"final solution error BCD    : "
+          f"{float(res_bcd.history['sol_err'][-1]):.2e}")
+    print(f"final solution error CA-BCD : "
+          f"{float(res_ca.history['sol_err'][-1]):.2e}")
+    print(f"Gram condition numbers (s={s}): median "
+          f"{float(np.median(res_ca.history['gram_cond'])):.2f}, max "
+          f"{float(np.max(res_ca.history['gram_cond'])):.2f}")
+    assert dev < 1e-8, "CA-BCD must match BCD exactly"
+    print("\nsame iterates, 1/s the synchronizations -- the paper's claim.")
+
+
+if __name__ == "__main__":
+    main()

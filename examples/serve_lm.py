@@ -1,0 +1,9 @@
+"""Batched serving example: continuous batching over the slot engine
+(prefill buckets + single jit'd decode for all slots).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch llama3_2_3b
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

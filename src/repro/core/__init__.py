@@ -1,0 +1,27 @@
+"""repro.core -- the paper's contribution: communication-avoiding primal and
+dual block coordinate descent (CA-BCD / CA-BDCD) for regularized least squares,
+plus the baselines it is compared against (CG, TSQR) and the alpha-beta-gamma
+cost model used for the modeled scaling experiments."""
+from .bcd import SolveResult, bcd, ca_bcd, objective
+from .bdcd import bdcd, ca_bdcd
+from .direct import ridge_exact
+from .distributed import (bcd_sharded, bdcd_sharded, ca_bcd_sharded,
+                          ca_bdcd_sharded, lower_solver, make_solver_mesh)
+from .hlo_analysis import (CollectiveSummary, collective_summary,
+                           count_in_compiled, parse_collectives)
+from .krylov import cg_ridge, cg_ridge_history
+from .sampling import overlap_matrix, sample_blocks, sample_blocks_balanced
+from .subproblem import block_forward_substitution, solve_spd
+from .tsqr import tsqr, tsqr_ridge
+from . import cost_model
+
+__all__ = [
+    "SolveResult", "bcd", "ca_bcd", "bdcd", "ca_bdcd", "objective",
+    "ridge_exact", "cg_ridge", "cg_ridge_history", "tsqr", "tsqr_ridge",
+    "bcd_sharded", "bdcd_sharded", "ca_bcd_sharded", "ca_bdcd_sharded",
+    "lower_solver", "make_solver_mesh",
+    "sample_blocks", "sample_blocks_balanced", "overlap_matrix",
+    "block_forward_substitution", "solve_spd",
+    "CollectiveSummary", "collective_summary", "count_in_compiled",
+    "parse_collectives", "cost_model",
+]

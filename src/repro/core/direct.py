@@ -1,0 +1,23 @@
+"""Direct ridge solves used as ground truth (the paper uses CG with tol=1e-15;
+a Cholesky direct solve is equivalent for our synthetic sizes and exact)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .subproblem import solve_spd
+
+
+def ridge_exact(X: jax.Array, y: jax.Array, lam: float) -> jax.Array:
+    """w_opt = argmin lam/2||w||^2 + 1/(2n)||X^T w - y||^2.
+
+    Uses the primal normal equations when d <= n, else the dual (kernel)
+    identity w = X (X^T X/n + lam I)^{-1} y / n to keep the solve at
+    min(d, n)^2 cost.
+    """
+    d, n = X.shape
+    if d <= n:
+        A = X @ X.T / n + lam * jnp.eye(d, dtype=X.dtype)
+        return solve_spd(A, X @ y / n)
+    A = X.T @ X / n + lam * jnp.eye(n, dtype=X.dtype)
+    return X @ solve_spd(A, y) / n

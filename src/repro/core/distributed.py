@@ -1,0 +1,224 @@
+"""Distributed (CA-)BCD / (CA-)BDCD via shard_map + jax.lax collectives.
+
+Layouts follow the paper's analysis (section 4):
+
+* (CA-)BCD : 1D-block-column -- X's data-point axis (n) sharded, vectors in
+  R^n sharded, vectors in R^d replicated.  The Gram of sampled *rows* then
+  needs one psum over the column axis per Gram (Theorems 1/6).
+* (CA-)BDCD: 1D-block-row -- X's feature axis (d) sharded, vectors in R^d
+  sharded, vectors in R^n replicated (Theorems 2/7).
+
+Communication structure (the paper's claim, verified by HLO count in tests):
+
+  classical:  2 all-reduces per iteration      (Gram; residual)
+  classical fused: 1 all-reduce per iteration  (ours: Gram || residual packet)
+  CA(s):      2 all-reduces per s iterations
+  CA(s) fused: 1 all-reduce per s iterations   (default)
+
+The fused packet is a beyond-paper optimization: the sb x sb Gram and the
+sb-vector residual contribution are concatenated into ONE sb x (sb+1) operand
+so each outer iteration has exactly one synchronization event on the wire.
+``fuse_packet=False`` reproduces the paper's two-reduction schedule for the
+faithful baseline measured in EXPERIMENTS.md section Perf.
+
+All devices compute identical block indices from the replicated key (the
+paper's shared-seed trick), so the overlap terms and the inner block forward
+substitution are local and replicated.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .sampling import overlap_matrix, sample_blocks
+from .subproblem import block_forward_substitution, solve_spd
+
+
+def make_solver_mesh(n_devices: int | None = None, name: str = "shards") -> Mesh:
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    return jax.make_mesh((n,), (name,),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    """Zero-pad ``axis`` of x up to a multiple of ``mult``.  Zero rows/columns
+    of X contribute nothing to Grams, residuals or updates, and the sampler
+    only draws indices < the true size, so padding is exact (tested)."""
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _axes(axis) -> tuple:
+    return axis if isinstance(axis, tuple) else (axis,)
+
+
+def _pvary(x, axis):
+    """Mark a locally-created array as device-varying over ``axis`` (scan-carry
+    vma bookkeeping inside shard_map)."""
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, _axes(axis))
+    return jax.lax.pcast(x, _axes(axis), to="varying")  # newer spelling
+
+
+def _psum_packet(G_local, r_local, axis, fuse):
+    sb = G_local.shape[0]
+    if fuse:
+        packet = jax.lax.psum(
+            jnp.concatenate([G_local, r_local[:, None]], axis=1), axis)
+        return packet[:, :sb], packet[:, sb]
+    return jax.lax.psum(G_local, axis), jax.lax.psum(r_local, axis)
+
+
+# --------------------------------------------------------------------------
+# Primal: 1D-block-column
+# --------------------------------------------------------------------------
+
+def ca_bcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
+                   s: int, iters: int, key: jax.Array, *,
+                   axis: str = "shards", fuse_packet: bool = True,
+                   idx: jax.Array | None = None, unroll: int = 1):
+    """CA-BCD with X (d, n) sharded over columns.  s=1 gives the classical
+    schedule (one Gram reduction per iteration).  Returns (w replicated,
+    alpha sharded over n)."""
+    d, n = X.shape
+    if iters % s:
+        raise ValueError(f"iters={iters} must be a multiple of s={s}")
+    if idx is None:
+        idx = sample_blocks(key, d, b, iters)
+    idx = idx.reshape(iters // s, s, b)
+    sb = s * b
+    dtype = X.dtype
+    n_shards = math.prod(mesh.shape[a] for a in _axes(axis))
+    X = _pad_to(X, n_shards, axis=1)
+    y = _pad_to(y, n_shards, axis=0)
+
+    def body(Xl, yl, idx_rep):
+        w = jnp.zeros((d,), dtype)
+        # alpha is device-varying (each shard owns a slice of R^n); mark the
+        # initial zeros as varying over the mesh axis for the scan carry.
+        al = _pvary(jnp.zeros(yl.shape, dtype), axis)
+
+        def outer(carry, idx_k):
+            w, al = carry
+            flat = idx_k.reshape(sb)
+            Yl = Xl[flat, :]                       # (sb, n/P) sampled rows, local panel
+            Gl = Yl @ Yl.T / n                     # local Gram contribution
+            rl = Yl @ (yl - al) / n                # local residual contribution
+            G, r = _psum_packet(Gl, rl, axis, fuse_packet)   # THE sync point
+            A = G + lam * overlap_matrix(flat).astype(dtype)
+            base = r - lam * w[flat]
+            dws = block_forward_substitution(A, base, s, b)  # local, replicated
+            w = w.at[flat].add(dws)                          # Eq. (9), replicated
+            al = al + Yl.T @ dws                             # Eq. (10), local shard
+            return (w, al), None
+
+        (w, al), _ = jax.lax.scan(outer, (w, al), idx_rep, unroll=unroll)
+        return w, al
+
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(P(None, axis), P(axis), P(None)),
+                       out_specs=(P(None), P(axis)))
+    w, alpha = fn(X, y, idx)
+    return w, alpha[:n]
+
+
+def bcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
+                iters: int, key: jax.Array, *, axis: str = "shards",
+                fuse_packet: bool = False, idx: jax.Array | None = None):
+    """Classical distributed BCD (Theorem 1 schedule): per-iteration reductions.
+    Implemented as CA with s=1; ``fuse_packet=False`` keeps the paper's separate
+    Gram and residual reductions."""
+    return ca_bcd_sharded(mesh, X, y, lam, b, 1, iters, key, axis=axis,
+                          fuse_packet=fuse_packet, idx=idx)
+
+
+# --------------------------------------------------------------------------
+# Dual: 1D-block-row
+# --------------------------------------------------------------------------
+
+def ca_bdcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
+                    s: int, iters: int, key: jax.Array, *,
+                    axis: str = "shards", fuse_packet: bool = True,
+                    idx: jax.Array | None = None, unroll: int = 1):
+    """CA-BDCD with X (d, n) sharded over rows.  Returns (w sharded over d,
+    alpha replicated)."""
+    d, n = X.shape
+    if iters % s:
+        raise ValueError(f"iters={iters} must be a multiple of s={s}")
+    if idx is None:
+        idx = sample_blocks(key, n, b, iters)
+    idx = idx.reshape(iters // s, s, b)
+    sb = s * b
+    dtype = X.dtype
+    n_shards = math.prod(mesh.shape[a] for a in _axes(axis))
+    X = _pad_to(X, n_shards, axis=0)
+
+    def body(Xl, y_rep, idx_rep):
+        wl = _pvary(jnp.zeros(Xl.shape[:1], dtype), axis)  # local shard of w
+        alpha = jnp.zeros((n,), dtype)             # replicated dual iterate
+
+        def outer(carry, idx_k):
+            wl, alpha = carry
+            flat = idx_k.reshape(sb)
+            Yl = Xl[:, flat]                       # (d/P, sb) sampled columns
+            Gl = Yl.T @ Yl / (lam * n * n)
+            ul = Yl.T @ wl                         # local contribution to Y^T w
+            G, u = _psum_packet(Gl, ul, axis, fuse_packet)   # THE sync point
+            A = G + overlap_matrix(flat).astype(dtype) / n
+            base = (u - alpha[flat] - y_rep[flat]) / n
+            das = block_forward_substitution(A, base, s, b)
+            alpha = alpha.at[flat].add(das)                  # Eq. (20), replicated
+            wl = wl - Yl @ das / (lam * n)                   # Eq. (19), local shard
+            return (wl, alpha), None
+
+        (wl, alpha), _ = jax.lax.scan(outer, (wl, alpha), idx_rep, unroll=unroll)
+        return wl, alpha
+
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(P(axis, None), P(None), P(None)),
+                       out_specs=(P(axis), P(None)))
+    wl, alpha = fn(X, y, idx)
+    return wl[:d], alpha
+
+
+def bdcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
+                 iters: int, key: jax.Array, *, axis: str = "shards",
+                 fuse_packet: bool = False, idx: jax.Array | None = None):
+    """Classical distributed BDCD (Theorem 2 schedule)."""
+    return ca_bdcd_sharded(mesh, X, y, lam, b, 1, iters, key, axis=axis,
+                           fuse_packet=fuse_packet, idx=idx)
+
+
+# --------------------------------------------------------------------------
+# Lowering helpers (used by tests, benchmarks, and the dry-run)
+# --------------------------------------------------------------------------
+
+def lower_solver(solver, mesh: Mesh, d: int, n: int, lam: float, b: int, s: int,
+                 iters: int, *, axis: str = "shards", fuse_packet: bool = True,
+                 dtype=jnp.float32, col_sharded: bool = True, unroll: int = 1):
+    """Lower+compile a solver on abstract operands; returns the Compiled object
+    (for HLO collective counting and roofline terms)."""
+    from jax.sharding import NamedSharding
+    xspec = P(None, axis) if col_sharded else P(axis, None)
+    yspec = P(axis) if col_sharded else P(None)
+    X = jax.ShapeDtypeStruct((d, n), dtype, sharding=NamedSharding(mesh, xspec))
+    y_len = n
+    y = jax.ShapeDtypeStruct((y_len,), dtype, sharding=NamedSharding(mesh, yspec))
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    def run(Xv, yv, keyv):
+        return solver(mesh, Xv, yv, lam, b, s, iters,
+                      jax.random.wrap_key_data(keyv), axis=axis,
+                      fuse_packet=fuse_packet, unroll=unroll)
+
+    return jax.jit(run).lower(X, y, key).compile()

@@ -1,0 +1,146 @@
+"""HLO collective-op analysis.
+
+This is the measurement backbone for (a) the paper's latency claim -- the
+number of collectives on the critical path drops by exactly ``s`` in CA-BCD /
+CA-BDCD, which we verify by counting ops in compiled HLO -- and (b) the
+roofline collective term, which ``cost_analysis()`` does not report, so we
+parse ``compiled.as_text()`` and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op.
+
+Conventions (verified against jax 0.8.2 CPU-backend HLO):
+  %name = f32[8,8]{1,0} all-reduce(%op), channel_id=1, replica_groups=[2,4]<=[8], ...
+Result-shape bytes are parsed from the type; operand bytes are derived per op
+kind (all-gather results are group_size x the operand, reduce-scatter the
+inverse).  ``-start`` ops are counted once, ``-done`` ops skipped.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "c64": 8, "c128": 16,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+_OP_RE = re.compile(
+    r"=\s*(?P<type>\([^=]*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<kind>" + "|".join(COLLECTIVE_KINDS) + r")(?P<phase>-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_GROUPS_BRACKET_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    kind: str
+    result_bytes: float   # bytes of the op's result shape(s)
+    operand_bytes: float  # derived operand bytes ("words on the wire" source)
+    link_bytes: float     # ring-model bytes crossing links per device
+    group_size: int
+    line: str
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        size = _DTYPE_BYTES.get(dtype)
+        if size is None:
+            continue  # token[...] that is not a dtype (e.g. sharding annotations)
+        n = 1
+        if dims:
+            for piece in dims.split(","):
+                n *= int(piece)
+        total += n * size
+    return total
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = _GROUPS_BRACKET_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        ids = [p for p in m.group(1).replace(" ", "").split(",") if p]
+        return max(len(ids), 1)
+    return default
+
+
+def parse_collectives(hlo_text: str, total_devices: int | None = None) -> list[CollectiveOp]:
+    ops: list[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if m.group("phase") == "-done":
+            continue  # paired with a counted -start
+        kind = m.group("kind")
+        type_str = m.group("type")
+        result = _shape_bytes(type_str)
+        if m.group("phase") == "-start" and type_str.startswith("("):
+            # -start result is (operand(s), result(s)); halve to avoid double count.
+            result /= 2
+        g = _group_size(line, default=total_devices or 1)
+        if kind == "all-gather":
+            operand = result / max(g, 1)
+            link = result * (g - 1) / max(g, 1)
+        elif kind == "reduce-scatter":
+            operand = result * g
+            link = operand * (g - 1) / max(g, 1)
+        elif kind == "all-reduce":
+            operand = result
+            link = 2 * result * (g - 1) / max(g, 1)
+        elif kind in ("all-to-all", "ragged-all-to-all"):
+            operand = result
+            link = result * (g - 1) / max(g, 1)
+        else:  # collective-permute / broadcast
+            operand = result
+            link = result
+        ops.append(CollectiveOp(kind, result, operand, link, g, line.strip()[:200]))
+    return ops
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveSummary:
+    count: int
+    operand_bytes: float
+    link_bytes: float
+    by_kind: dict
+
+    def __str__(self) -> str:
+        parts = [f"{k}: n={v[0]} operand={v[1]:.3e}B link={v[2]:.3e}B"
+                 for k, v in sorted(self.by_kind.items())]
+        return (f"collectives total n={self.count} operand={self.operand_bytes:.3e}B "
+                f"link={self.link_bytes:.3e}B | " + "; ".join(parts))
+
+
+def summarize(ops: Iterable[CollectiveOp]) -> CollectiveSummary:
+    by_kind: dict[str, list] = {}
+    count = 0
+    ob = lb = 0.0
+    for op in ops:
+        count += 1
+        ob += op.operand_bytes
+        lb += op.link_bytes
+        ent = by_kind.setdefault(op.kind, [0, 0.0, 0.0])
+        ent[0] += 1
+        ent[1] += op.operand_bytes
+        ent[2] += op.link_bytes
+    return CollectiveSummary(count, ob, lb, {k: tuple(v) for k, v in by_kind.items()})
+
+
+def collective_summary(hlo_text: str, total_devices: int | None = None) -> CollectiveSummary:
+    return summarize(parse_collectives(hlo_text, total_devices))
+
+
+def count_in_compiled(compiled) -> CollectiveSummary:
+    """Summary for a jax ``Compiled`` object."""
+    return collective_summary(compiled.as_text())

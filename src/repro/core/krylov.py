@@ -1,0 +1,88 @@
+"""Conjugate gradients on the regularized normal equations -- the paper's
+Krylov baseline (Table 2, Figure 1) and its ground-truth generator
+(``w_opt`` from "CG with tol 1e-15").
+
+The matvec is computed as X (X^T v)/n + lam v, i.e. two panel products per
+iteration and never a materialized d x d matrix, matching the O(kdn) flops of
+Table 2.  One all-reduce per iteration in the distributed setting (the
+matvec contraction) plus two dot-product reductions -- also O(k log P)
+latency, which is the regime BCD/BDCD compete with in Figure 1c.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CGResult(NamedTuple):
+    w: jax.Array
+    iters: jax.Array
+    history: dict
+
+
+def cg_ridge(X: jax.Array, y: jax.Array, lam: float, *, tol: float = 1e-15,
+             max_iters: int = 1000, w_ref: jax.Array | None = None) -> CGResult:
+    d, n = X.shape
+    rhs = X @ y / n
+
+    def matvec(v):
+        return X @ (X.T @ v) / n + lam * v
+
+    w0 = jnp.zeros((d,), X.dtype)
+    r0 = rhs
+    rs0 = r0 @ r0
+    stop2 = (tol * jnp.linalg.norm(rhs)) ** 2
+
+    def body(carry):
+        w, r, p, rs, k = carry
+        Ap = matvec(p)
+        a = rs / (p @ Ap)
+        w = w + a * p
+        r = r - a * Ap
+        rs_new = r @ r
+        p = r + (rs_new / rs) * p
+        return w, r, p, rs_new, k + 1
+
+    def cond(carry):
+        _, _, _, rs, k = carry
+        return jnp.logical_and(rs > stop2, k < max_iters)
+
+    w, r, p, rs, k = jax.lax.while_loop(
+        cond, body, (w0, r0, r0, rs0, jnp.array(0, jnp.int32)))
+
+    hist = {}
+    if w_ref is not None:
+        hist["sol_err"] = jnp.linalg.norm(w - w_ref) / jnp.linalg.norm(w_ref)
+    return CGResult(w, k, hist)
+
+
+def cg_ridge_history(X: jax.Array, y: jax.Array, lam: float, iters: int,
+                     w_ref: jax.Array | None = None) -> CGResult:
+    """Fixed-iteration CG that records per-iteration metrics (for Figure 1)."""
+    d, n = X.shape
+    rhs = X @ y / n
+
+    def matvec(v):
+        return X @ (X.T @ v) / n + lam * v
+
+    def step(carry, _):
+        w, r, p, rs = carry
+        Ap = matvec(p)
+        a = rs / (p @ Ap)
+        w = w + a * p
+        r = r - a * Ap
+        rs_new = r @ r
+        p = r + (rs_new / rs) * p
+        m = {"res_norm": jnp.sqrt(rs_new)}
+        nloc = X.shape[1]
+        obj_r = X.T @ w - y
+        m["objective"] = 0.5 / nloc * (obj_r @ obj_r) + 0.5 * lam * (w @ w)
+        if w_ref is not None:
+            m["sol_err"] = jnp.linalg.norm(w - w_ref) / jnp.linalg.norm(w_ref)
+        return (w, r, p, rs_new), m
+
+    w0 = jnp.zeros((d,), X.dtype)
+    (w, *_), hist = jax.lax.scan(step, (w0, rhs, rhs, rhs @ rhs), None, length=iters)
+    return CGResult(w, jnp.array(iters, jnp.int32), hist)

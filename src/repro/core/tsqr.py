@@ -1,0 +1,70 @@
+"""Tall-Skinny QR (TSQR) baseline (paper Table 2 / Figure 1, ref. [14]).
+
+Binary-tree QR over row panels: each leaf computes a local Householder QR,
+adjacent R factors are stacked and re-factored up the tree -- log2(P) stages,
+a single reduction in the distributed setting (the paper's "single message"
+point in Figure 1c).  We use it to solve ridge via the stable semi-normal
+equations: QR of the regularized tall matrix A = [X^T/sqrt(n); sqrt(lam) I]
+gives R with A^T A = R^T R, then two triangular solves.  For d > n the dual
+form is used so the panel stays tall and skinny (cost min(d,n)^2 max(d,n)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+
+def _pad_rows(A: jax.Array, rows: int) -> jax.Array:
+    pad = rows - A.shape[0]
+    if pad <= 0:
+        return A
+    return jnp.concatenate([A, jnp.zeros((pad, A.shape[1]), A.dtype)], axis=0)
+
+
+def tsqr(A: jax.Array, n_blocks: int = 8) -> jax.Array:
+    """Return the R factor of A (tall, m >= c) via a binary reduction tree.
+
+    ``n_blocks`` plays the role of P leaf processors; it is rounded up to a
+    power of two.  Equivalent (up to row signs) to jnp.linalg.qr(A)[1]; the
+    sign ambiguity cancels in R^T R, which is all the ridge solve consumes.
+    """
+    m, c = A.shape
+    nb = 1
+    while nb < n_blocks:
+        nb *= 2
+    rows = -(-m // nb) * nb
+    A = _pad_rows(A, rows)
+    panels = A.reshape(nb, rows // nb, c)
+
+    # Leaf QRs.  Local panels must be at least c tall for a square R; pad if not.
+    leaf_rows = max(rows // nb, c)
+    panels = jax.vmap(lambda p: _pad_rows(p, leaf_rows))(panels)
+    rs = jax.vmap(lambda p: jnp.linalg.qr(p, mode="r"))(panels)  # (nb, c, c)
+
+    # Reduction tree: stack sibling Rs and re-factor.
+    while rs.shape[0] > 1:
+        half = rs.shape[0] // 2
+        stacked = jnp.concatenate([rs[:half], rs[half:]], axis=1)  # (half, 2c, c)
+        rs = jax.vmap(lambda p: jnp.linalg.qr(p, mode="r"))(stacked)
+    return rs[0]
+
+
+def tsqr_ridge(X: jax.Array, y: jax.Array, lam: float, n_blocks: int = 8) -> jax.Array:
+    """Ridge solve via TSQR (stable implicit normal equations)."""
+    d, n = X.shape
+    sqlam = jnp.sqrt(jnp.asarray(lam, X.dtype))
+    if d <= n:
+        A = jnp.concatenate([X.T / jnp.sqrt(jnp.asarray(n, X.dtype)),
+                             sqlam * jnp.eye(d, dtype=X.dtype)], axis=0)
+        R = tsqr(A, n_blocks)
+        rhs = X @ y / n
+        z = jsl.solve_triangular(R.T, rhs, lower=True)
+        return jsl.solve_triangular(R, z, lower=False)
+    # Dual path: w = X (X^T X / n + lam I)^{-1} y / n.
+    A = jnp.concatenate([X / jnp.sqrt(jnp.asarray(n, X.dtype)),
+                         sqlam * jnp.eye(n, dtype=X.dtype)], axis=0)
+    R = tsqr(A, n_blocks)
+    z = jsl.solve_triangular(R.T, y, lower=True)
+    z = jsl.solve_triangular(R, z, lower=False)
+    return X @ z / n

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+gram/      -- the sb x sb Gram packet (the BLAS-3 core of CA-BCD/CA-BDCD)
+blocksolve/ -- the s-step block forward-substitution sweep
+Each kernel ships <name>_kernel.py (pallas_call + BlockSpec), ops.py (jit'd
+dispatch with padding), ref.py (pure-jnp oracle).
+"""

@@ -1,0 +1,4 @@
+from .ops import gram, gram_packet
+from .ref import gram_packet_ref, gram_ref
+
+__all__ = ["gram", "gram_packet", "gram_ref", "gram_packet_ref"]

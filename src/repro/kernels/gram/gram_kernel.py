@@ -1,0 +1,124 @@
+"""Pallas TPU kernel for the CA-BCD/CA-BDCD Gram packet.
+
+This is the paper's compute hot spot: the s-step transformation converts s
+BLAS-1/2 iterations into one BLAS-3 ``sb x sb`` Gram product (section 1: the
+same insight that drives s-step Krylov methods), so the kernel below is where
+the MXU earns the extra ``s x`` flops the method trades for latency.
+
+TPU mapping (DESIGN.md section 2.3):
+  * grid = (m/bm, m/bm, n/bk); k innermost so each (i, j) output tile stays
+    resident in VMEM across the full contraction.
+  * BlockSpecs tile A twice -- as the row panel (i, k) and the column panel
+    (j, k) -- with 128-aligned tiles feeding the 128x128 MXU; accumulation in
+    f32 regardless of input dtype.
+  * symmetry: G = G^T, so blocks with j > i are skipped (zero-filled) and the
+    wrapper mirrors the strict lower triangle -- a ~2x MXU saving measured in
+    the section Perf log.
+  * the residual vector r = scale * A @ u rides along in the same pass
+    (computed by the j == i grid cells against the u tile), so the packet
+    needs ONE read of A from HBM instead of two.
+
+VMEM budget at the default tiles (bm=128, bk=512, f32):
+  2 * (128*512) * 4B (A panels) + 128*128*4B (G tile) + 512*4B (u) ~= 2.6 MiB
+well inside the ~16 MiB/core VMEM of TPU v5e.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BM = 128   # Gram tile edge (MXU-aligned)
+DEFAULT_BK = 512   # contraction tile
+
+
+def _gram_packet_kernel(a_i_ref, a_j_ref, u_ref, g_ref, r_ref, *,
+                        scale: float, reg: float, n_k: int, symmetric_skip: bool):
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    @pl.when(jnp.logical_and(k == 0, j == 0))
+    def _init_r():
+        r_ref[...] = jnp.zeros_like(r_ref)
+
+    compute = jnp.logical_or(j <= i, jnp.logical_not(symmetric_skip))
+
+    @pl.when(compute)
+    def _accumulate():
+        a_i = a_i_ref[...]
+        a_j = a_j_ref[...]
+        g_ref[...] += scale * jax.lax.dot_general(
+            a_i, a_j, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    # Residual panel: each row block i accumulates A_i @ u once per k tile;
+    # attach it to the j == 0 cells so it is computed exactly once.
+    @pl.when(j == 0)
+    def _residual():
+        a_i = a_i_ref[...]
+        u = u_ref[...]
+        r_ref[...] += scale * jax.lax.dot_general(
+            a_i, u[:, None], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[:, 0]
+
+    # Regularizer on the true diagonal, once, on the last k step.
+    @pl.when(jnp.logical_and(k == n_k - 1, i == j))
+    def _reg():
+        bm = g_ref.shape[0]
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 1)
+        g_ref[...] += jnp.where(rows == cols, jnp.float32(reg), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "reg", "bm", "bk",
+                                             "symmetric_skip", "interpret"))
+def gram_packet_pallas(A: jax.Array, u: jax.Array, *, scale: float = 1.0,
+                       reg: float = 0.0, bm: int = DEFAULT_BM,
+                       bk: int = DEFAULT_BK, symmetric_skip: bool = True,
+                       interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """(G, r) = (scale*A@A^T + reg*I, scale*A@u) for A (m, n), u (n,).
+
+    Requires m % bm == 0 and n % bk == 0 (ops.py pads).  f32 outputs.
+    """
+    m, n = A.shape
+    if m % bm or n % bk:
+        raise ValueError(f"A shape {A.shape} not tiled by bm={bm}, bk={bk}")
+    n_k = n // bk
+    grid = (m // bm, m // bm, n_k)
+
+    kernel = functools.partial(
+        _gram_packet_kernel, scale=scale, reg=reg, n_k=n_k,
+        symmetric_skip=symmetric_skip)
+
+    g, r = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # A row panel
+            pl.BlockSpec((bm, bk), lambda i, j, k: (j, k)),   # A col panel
+            pl.BlockSpec((bk,), lambda i, j, k: (k,)),        # u tile
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bm), lambda i, j, k: (i, j)),   # G tile
+            pl.BlockSpec((bm,), lambda i, j, k: (i,)),        # r tile
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, m), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(A, A, u)  # A appears twice: once as the row panel, once as the column panel
+
+    if symmetric_skip:
+        # Blocks strictly above the block diagonal were skipped (zeros);
+        # fill them from the transpose.  Diagonal blocks were computed fully.
+        blk = jnp.arange(m) // bm
+        upper = blk[:, None] < blk[None, :]
+        g = jnp.where(upper, g.T, g)
+    return g, r

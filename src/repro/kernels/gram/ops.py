@@ -1,0 +1,70 @@
+"""Public ops for the Gram packet: pad-to-tile, backend dispatch, unpad.
+
+``gram_packet(A, u)`` is the entry point the solvers call.  On TPU it runs the
+Pallas kernel; everywhere else (this CPU container, and inside the dry-run
+lowering) it uses the jnp reference, which XLA fuses well.  ``impl`` can force
+either path; tests force ``impl="pallas_interpret"`` to execute the kernel
+body in Python on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .gram_kernel import DEFAULT_BK, DEFAULT_BM, gram_packet_pallas
+
+
+def _pad_axis(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _auto_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def gram_packet(A: jax.Array, u: jax.Array, *, scale: float = 1.0,
+                reg: float = 0.0, impl: str | None = None,
+                bm: int = DEFAULT_BM, bk: int = DEFAULT_BK,
+                symmetric_skip: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Fused (G, r) = (scale*A@A^T + reg*I, scale*A@u); A (m, n), u (n,).
+
+    Zero padding is exact: padded k-columns contribute 0 to both products and
+    padded m-rows are sliced off (their diagonal reg never leaves the pad).
+    """
+    impl = impl or _auto_impl()
+    if impl == "ref":
+        return ref.gram_packet_ref(A, u, scale, reg)
+    m, n = A.shape
+    # Pick tile sizes that do not exceed the (padded) operand.
+    bm_eff = min(bm, _round_up(m, 8))
+    bk_eff = min(bk, _round_up(n, 128))
+    Ap = _pad_axis(_pad_axis(A, bm_eff, 0), bk_eff, 1)
+    up = _pad_axis(u, bk_eff, 0)
+    G, r = gram_packet_pallas(
+        Ap, up, scale=scale, reg=reg, bm=bm_eff, bk=bk_eff,
+        symmetric_skip=symmetric_skip,
+        interpret=(impl == "pallas_interpret"))
+    return G[:m, :m], r[:m]
+
+
+def gram(A: jax.Array, *, scale: float = 1.0, reg: float = 0.0,
+         impl: str | None = None, **kw) -> jax.Array:
+    """G = scale * A @ A^T + reg * I (Gram only; u path fed zeros)."""
+    impl = impl or _auto_impl()
+    if impl == "ref":
+        return ref.gram_ref(A, scale, reg)
+    G, _ = gram_packet(A, jnp.zeros((A.shape[1],), A.dtype), scale=scale,
+                       reg=reg, impl=impl, **kw)
+    return G
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult

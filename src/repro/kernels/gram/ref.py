@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Gram kernels.  These define correctness; the
+Pallas kernels are validated against them (interpret mode) across a
+shape/dtype sweep in tests/test_kernels.py."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gram_ref(A: jax.Array, scale: float = 1.0, reg: float = 0.0) -> jax.Array:
+    """G = scale * A @ A^T + reg * I, accumulated in f32 (matching the MXU)."""
+    acc = jnp.float32 if A.dtype != jnp.float64 else jnp.float64
+    G = jnp.einsum("ik,jk->ij", A, A, preferred_element_type=acc)
+    G = scale * G + reg * jnp.eye(A.shape[0], dtype=acc)
+    return G.astype(acc)
+
+
+def gram_packet_ref(A: jax.Array, u: jax.Array, scale: float = 1.0,
+                    reg: float = 0.0) -> tuple[jax.Array, jax.Array]:
+    """Fused outer-iteration packet: (G, r) = (scale*AA^T + reg*I, scale*A@u).
+
+    One pass over A produces both the sb x sb Gram and the sb residual vector
+    -- the compute-side twin of the fused one-all-reduce packet in
+    repro.core.distributed.
+    """
+    acc = jnp.float32 if A.dtype != jnp.float64 else jnp.float64
+    G = gram_ref(A, scale, reg)
+    r = scale * jnp.einsum("ik,k->i", A, u, preferred_element_type=acc)
+    return G, r.astype(acc)

@@ -1,0 +1,87 @@
+"""Abstract input construction for every (architecture x shape) dry-run cell.
+
+ShapeDtypeStruct stand-ins only -- weak-type-correct, shardable, never
+allocated.  The same functions drive the real launchers (which materialize
+arrays with identical shardings), so the dry-run lowers exactly the production
+program.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import api
+from repro.models.module import ParamSpec
+from repro.models.sharding import make_rules
+from repro.train.trainer import abstract_train_state, train_step_shardings
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
+    """Abstract training/prefill batch."""
+    rules = make_rules(mesh, fsdp=cfg.fsdp)
+    B, S = shape.global_batch, shape.seq_len
+    bspec = rules.spec_for((B, S), ("batch", "seq"))
+    out = {}
+    if cfg.family == "audio":
+        S_enc = max(S // 4, 128)
+        espec = rules.spec_for((B, S_enc, cfg.d_model), ("batch", "seq", "embed"))
+        out["src_embeds"] = _sds((B, S_enc, cfg.d_model), cfg.dtype, mesh, espec)
+        out["tokens"] = _sds((B, S), jnp.int32, mesh, bspec)
+    elif cfg.family == "vlm":
+        ft = cfg.frontend_tokens
+        st = S - ft
+        espec = rules.spec_for((B, ft, cfg.d_model), ("batch", "seq", "embed"))
+        out["extra_embeds"] = _sds((B, ft, cfg.d_model), cfg.dtype, mesh, espec)
+        tspec = rules.spec_for((B, st), ("batch", "seq"))
+        out["tokens"] = _sds((B, st), jnp.int32, mesh, tspec)
+    else:
+        out["tokens"] = _sds((B, S), jnp.int32, mesh, bspec)
+    if shape.kind == "train":
+        lab_shape = out["tokens"].shape
+        lspec = rules.spec_for(lab_shape, ("batch", "seq"))
+        out["labels"] = _sds(lab_shape, jnp.int32, mesh, lspec)
+        out["mask"] = _sds(lab_shape, jnp.float32, mesh, lspec)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                 seq_shard: bool = True) -> tuple:
+    """(params, cache, token, pos) abstract operands for serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    overrides = {"cache_seq": ("model",)} if seq_shard else {}
+    rules = make_rules(mesh, fsdp=cfg.fsdp, overrides=overrides)
+    params = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                       sharding=rules.sharding_for(s)),
+        api.param_specs(cfg), is_leaf=lambda x: isinstance(x, ParamSpec))
+    cache = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                       sharding=rules.sharding_for(s)),
+        api.init_cache_specs(cfg, B, S),
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+    tspec = rules.spec_for((B,), ("batch",))
+    tok = _sds((B,), jnp.int32, mesh, tspec)
+    pos = _sds((B,), jnp.int32, mesh, tspec)
+    return params, cache, tok, pos
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> tuple:
+    """(params, batch) abstract operands for the prefill step."""
+    rules = make_rules(mesh, fsdp=cfg.fsdp)
+    params = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                       sharding=rules.sharding_for(s)),
+        api.param_specs(cfg), is_leaf=lambda x: isinstance(x, ParamSpec))
+    return params, batch_specs(cfg, shape, mesh)
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> tuple:
+    """(state, batch) abstract operands for train_step."""
+    state = abstract_train_state(cfg, mesh)
+    return state, batch_specs(cfg, shape, mesh)

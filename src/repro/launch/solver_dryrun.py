@@ -1,0 +1,68 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (must precede all other imports -- see dryrun.py)
+
+"""The paper's own technique at the production mesh: lower + compile
+(CA-)BCD/(CA-)BDCD on 256 chips (16x16, flattened 1D layout over both axes)
+and 512 chips (2x16x16), and record the collective schedule per s.
+
+This is hillclimb cell 3 ("most representative of the paper's technique"):
+the measured table is
+    schedule            syncs / H iters     wire bytes / H iters
+    paper-faithful s=1        2H              H * (b^2+b) w
+    paper-faithful s          2H/s            (H/s) * (s^2 b^2 + sb) w
+    ours fused s               H/s            (H/s) * (s^2 b^2 + sb) w
+Usage: PYTHONPATH=src python -m repro.launch.solver_dryrun [--out DIR]
+"""
+import argparse
+import json
+import time
+
+import jax
+
+from repro.core import ca_bcd_sharded, count_in_compiled
+from repro.core.distributed import lower_solver
+from repro.launch.mesh import make_production_mesh
+
+
+def run(out_dir: str = "artifacts/solver") -> list[dict]:
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    d, n = 4096, 1 << 22          # dense 4096 x 4.2M f32 panel (64 GiB), abstract
+    b, iters = 8, 8
+    for mesh_kind in ("single", "multi"):
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        axis = tuple(mesh.axis_names)          # flatten the whole mesh: 1D layout
+        for s, fused in ((1, False), (4, False), (4, True), (8, True)):
+            if iters % s:
+                continue
+            t0 = time.time()
+            comp = lower_solver(ca_bcd_sharded, mesh, d, n, 1e-3, b, s, iters,
+                                axis=axis, fuse_packet=fused,
+                                unroll=iters // s)
+            cs = count_in_compiled(comp)
+            ca = comp.cost_analysis()
+            if isinstance(ca, list):
+                ca = ca[0]
+            rec = {
+                "mesh": mesh_kind, "chips": mesh.size, "s": s, "fused": fused,
+                "iters": iters, "collectives": cs.count,
+                "operand_bytes": cs.operand_bytes, "link_bytes": cs.link_bytes,
+                "flops_per_device": ca.get("flops", 0.0),
+                "compile_s": round(time.time() - t0, 1),
+            }
+            results.append(rec)
+            print(f"[solver-dryrun] {mesh_kind} s={s} fused={fused}: "
+                  f"{cs.count} collectives / {iters} iters, "
+                  f"{cs.operand_bytes:.2e} B wire, "
+                  f"compile {rec['compile_s']}s", flush=True)
+    with open(os.path.join(out_dir, "solver_cells.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/solver")
+    args = ap.parse_args()
+    run(args.out)

@@ -1,0 +1,88 @@
+"""Training launcher: ``python -m repro.launch.train --arch qwen2_0_5b
+--preset cpu-small --steps 200``.
+
+Presets size the run to the environment; the sharded path uses the same
+train_step the dry-run compiles.  On a real pod this process runs once per
+host with jax.distributed.initialize() (single-process here).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config, get_reduced
+from repro.train import Trainer, TrainRunConfig
+from repro.train.elastic import plan_mesh
+
+
+PRESETS = {
+    # ~10M params, runs on this CPU container in minutes
+    "cpu-small": dict(reduced=True, steps=200, global_batch=8, seq_len=256,
+                      lr=1e-3, d_model=256, n_layers=4),
+    # ~100M params: the end-to-end deliverable scale (hours on CPU, minutes on
+    # a v5e slice)
+    "100m": dict(reduced=True, steps=300, global_batch=32, seq_len=1024,
+                 lr=6e-4, d_model=768, n_layers=12),
+    # full published geometry (pods only)
+    "full": dict(reduced=False, steps=1000, global_batch=256, seq_len=4096,
+                 lr=3e-4),
+}
+
+
+def build_model_cfg(arch: str, preset: dict):
+    if not preset.get("reduced"):
+        return get_config(arch)
+    cfg = get_reduced(arch)
+    kw = {}
+    if "d_model" in preset:
+        d = preset["d_model"]
+        hd = cfg.resolved_head_dim
+        kw.update(d_model=d, d_ff=4 * d)
+        if cfg.n_heads:
+            kw.update(n_heads=max(d // 64, 1) , head_dim=64,
+                      n_kv_heads=max(min(cfg.n_kv_heads, d // 64), 1))
+    if "n_layers" in preset:
+        from repro.models.api import _superblock_period
+        period = _superblock_period(cfg)
+        layers = max(preset["n_layers"] // period, 1) * period
+        kw.update(n_layers=layers)
+        if cfg.family == "audio":
+            kw.update(enc_layers=layers)
+    cfg = dataclasses.replace(cfg, **kw)
+    return dataclasses.replace(cfg, vocab=get_config(arch).vocab // 4)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_0_5b")
+    ap.add_argument("--preset", default="cpu-small", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--mesh", default="none",
+                    help="'none' (single device), 'auto' (all local devices)")
+    args = ap.parse_args()
+
+    preset = dict(PRESETS[args.preset])
+    if args.steps:
+        preset["steps"] = args.steps
+    model_cfg = build_model_cfg(args.arch, preset)
+    run_cfg = TrainRunConfig(
+        steps=preset["steps"], global_batch=preset["global_batch"],
+        seq_len=preset["seq_len"], lr=preset["lr"], ckpt_dir=args.ckpt_dir)
+    mesh = None
+    if args.mesh == "auto" and len(jax.devices()) > 1:
+        mesh = plan_mesh(len(jax.devices()))
+    from repro.configs import n_params as npar
+    print(f"[train] arch={model_cfg.name} params~{npar(model_cfg)/1e6:.1f}M "
+          f"steps={run_cfg.steps} batch={run_cfg.global_batch} "
+          f"seq={run_cfg.seq_len}")
+    trainer = Trainer(model_cfg, run_cfg, mesh=mesh)
+    hist = trainer.run()
+    if hist:
+        print(f"[train] loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

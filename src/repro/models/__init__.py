@@ -1,0 +1,10 @@
+"""Model zoo substrate: functional layers + the three assembled bodies
+(decoder / enc-dec) covering all 10 assigned architectures."""
+from . import api, layers, mamba2, moe
+from .module import (ParamSpec, abstract_params, init_params, param_bytes,
+                     param_count, stack_specs)
+from .sharding import BASE_RULES, ShardingRules, constrain, make_rules
+
+__all__ = ["api", "layers", "mamba2", "moe", "ParamSpec", "abstract_params",
+           "init_params", "param_bytes", "param_count", "stack_specs",
+           "BASE_RULES", "ShardingRules", "constrain", "make_rules"]

@@ -1,0 +1,508 @@
+"""Model assembly: every assigned architecture reduces to one of three bodies
+
+  * decoder  -- dense / moe / ssm / hybrid / vlm (llava = decoder + patch
+                prefix; mamba2 = decoder with mamba sublayers and no MLP;
+                jamba = 1:7 attn:mamba interleave + alternating MoE)
+  * encdec   -- seamless (audio encoder + cross-attending text decoder)
+
+assembled from ParamSpec trees and scanned superblocks.  The *superblock* is
+the lcm of the attention interleave period and the MoE period, so every arch
+is a homogeneous scan over superblocks (compile cost = one superblock body).
+
+Public entry points (used by the trainer, server, dry-run and tests):
+  param_specs(cfg)                      -> ParamSpec tree
+  forward(params, cfg, batch)           -> logits
+  loss_fn(params, cfg, batch)           -> (loss, metrics)
+  init_cache_specs(cfg, batch, max_seq) -> cache ParamSpec-like tree
+  prefill(params, cfg, tokens, ...)     -> (logits_last, cache)
+  decode_step(params, cfg, cache, ...)  -> (logits, new cache)
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import mamba2 as M
+from . import moe as MOE
+from .module import ParamSpec, stack_specs
+
+# ---------------------------------------------------------------------------
+# Spec construction
+# ---------------------------------------------------------------------------
+
+
+def _superblock_period(cfg) -> int:
+    period = cfg.attn_layer_period
+    if cfg.moe:
+        period = math.lcm(period, cfg.moe.every_n_layers)
+    return period
+
+
+def _sublayer_specs(cfg, i: int) -> dict:
+    specs: dict = {"ln1": L.rmsnorm_spec(cfg.d_model, cfg.param_dtype)}
+    if cfg.layer_kind(i) == "attn":
+        specs["attn"] = L.attention_specs(cfg)
+    else:
+        specs["mamba"] = M.mamba_specs(cfg)
+    if cfg.d_ff > 0:
+        specs["ln2"] = L.rmsnorm_spec(cfg.d_model, cfg.param_dtype)
+        if cfg.mlp_kind(i) == "moe":
+            specs["moe"] = MOE.moe_specs(cfg)
+        else:
+            specs["mlp"] = L.mlp_specs(cfg)
+    return specs
+
+
+def _block_specs(cfg) -> dict:
+    period = _superblock_period(cfg)
+    if cfg.n_layers % period:
+        raise ValueError(f"{cfg.name}: n_layers={cfg.n_layers} not divisible "
+                         f"by superblock period {period}")
+    sub = {f"sub{j}": _sublayer_specs(cfg, j) for j in range(period)}
+    return stack_specs(sub, cfg.n_layers // period)
+
+
+def _encdec_specs(cfg) -> dict:
+    # Encoder: bidirectional attn + MLP; decoder: self-attn + cross-attn + MLP.
+    enc_layer = {
+        "ln1": L.rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+        "attn": L.attention_specs(cfg),
+        "ln2": L.rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+        "mlp": L.mlp_specs(cfg),
+    }
+    dec_layer = {
+        "ln1": L.rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+        "attn": L.attention_specs(cfg),
+        "lnx": L.rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+        "cross": L.attention_specs(cfg, cross=True),
+        "ln2": L.rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+        "mlp": L.mlp_specs(cfg),
+    }
+    return {
+        "encoder": stack_specs(enc_layer, cfg.enc_layers),
+        "enc_norm": L.rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+        "decoder": stack_specs(dec_layer, cfg.n_layers),
+    }
+
+
+def param_specs(cfg, experts_only: bool = False) -> dict:
+    if experts_only:
+        if not cfg.moe:
+            return {}
+        moe_layers = cfg.n_layers // cfg.moe.every_n_layers
+        e = MOE.moe_specs(cfg)
+        return stack_specs({k: e[k] for k in ("w1", "w2", "w3")}, moe_layers)
+    specs: dict = dict(L.embed_specs(cfg))
+    specs["final_norm"] = L.rmsnorm_spec(cfg.d_model, cfg.param_dtype)
+    if cfg.family == "audio":
+        specs.update(_encdec_specs(cfg))
+    else:
+        specs["blocks"] = _block_specs(cfg)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Sublayer application
+# ---------------------------------------------------------------------------
+
+
+def _apply_attn(p, x, cfg, positions, *, causal=True, x_kv=None):
+    q, k, v = L.qkv_proj(p, x, x_kv)
+    if x_kv is None:  # self-attention: rope on q and k
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    if cfg.q_head_pad:
+        # head-padding layout (section Perf): q was padded per kv group to a
+        # TP-divisible count; repeat kv to match so every head dim shards
+        # cleanly (repeated kv == grouped GQA math, exactly).
+        g = q.shape[2] // k.shape[2]
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    out = L.chunked_attention(q, k, v, causal=causal,
+                              block_q=cfg.block_q, block_kv=cfg.block_kv)
+    return L.out_proj(p, out)
+
+
+def _apply_sublayer(lp, x, cfg, j, positions, aux):
+    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    if "attn" in lp:
+        x = x + _apply_attn(lp["attn"], h, cfg, positions)
+    else:
+        x = x + M.mamba_block(lp["mamba"], h, cfg)
+    if "ln2" in lp:
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if "moe" in lp:
+            out, metrics = MOE.moe_block(lp["moe"], h, cfg)
+            aux = {k: aux.get(k, 0.0) + v for k, v in metrics.items()}
+            x = x + out
+        else:
+            x = x + L.swiglu(lp["mlp"], h)
+    return x, aux
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable if cfg.remat == "full"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _decoder_stack(params, cfg, x, positions):
+    period = _superblock_period(cfg)
+
+    def block(carry, blk):
+        x, aux = carry
+        for j in range(period):
+            x, aux = _apply_sublayer(blk[f"sub{j}"], x, cfg, j, positions, aux)
+        return (x, aux), None
+
+    aux0 = ({"moe_aux_loss": jnp.float32(0), "moe_drop_frac": jnp.float32(0)}
+            if cfg.moe else {})
+    (x, aux), _ = jax.lax.scan(_remat(block, cfg), (x, aux0), params["blocks"],
+                               unroll=cfg.scan_unroll)
+    return x, aux
+
+
+def _encoder_stack(params, cfg, x, positions):
+    def block(carry, lp):
+        x = carry
+        h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        x = x + _apply_attn(lp["attn"], h, cfg, positions, causal=False)
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.swiglu(lp["mlp"], h)
+        return x, None
+
+    x, _ = jax.lax.scan(_remat(block, cfg), x, params["encoder"],
+                        unroll=cfg.scan_unroll)
+    return L.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_decoder_stack(params, cfg, x, positions, enc_out):
+    def block(carry, lp):
+        x, aux = carry
+        h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        x = x + _apply_attn(lp["attn"], h, cfg, positions)
+        h = L.rmsnorm(x, lp["lnx"], cfg.norm_eps)
+        x = x + _apply_attn(lp["cross"], h, cfg, positions, causal=False,
+                            x_kv=enc_out)
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.swiglu(lp["mlp"], h)
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(_remat(block, cfg), (x, {}), params["decoder"],
+                               unroll=cfg.scan_unroll)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg, batch: dict):
+    """Returns (logits (B, S, Vpad), aux metrics).  batch keys:
+    tokens (B, St); optional extra_embeds (B, Sx, D) prefixed (vlm/audio-as-
+    decoder); audio family instead uses src_embeds + tokens."""
+    if cfg.family == "audio":
+        positions_src = jnp.arange(batch["src_embeds"].shape[1])[None, :]
+        enc = _encoder_stack(params, cfg, batch["src_embeds"].astype(cfg.dtype),
+                             positions_src)
+        x = L.embed(params, batch["tokens"]).astype(cfg.dtype)
+        positions = jnp.arange(x.shape[1])[None, :]
+        x, aux = _cross_decoder_stack(params, cfg, x, positions, enc)
+    else:
+        x = L.embed(params, batch["tokens"]).astype(cfg.dtype)
+        extra = batch.get("extra_embeds")
+        if extra is not None:
+            x = jnp.concatenate([extra.astype(cfg.dtype), x], axis=1)
+        positions = jnp.arange(x.shape[1])[None, :]
+        x, aux = _decoder_stack(params, cfg, x, positions)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params, x)
+    return logits, aux
+
+
+def loss_fn(params, cfg, batch: dict):
+    """Next-token cross entropy in f32 with masking; adds MoE aux losses."""
+    logits, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    St = labels.shape[1]
+    logits = logits[:, -St:, :].astype(jnp.float32)          # text positions only
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    loss = (nll * mask).sum() / jnp.clip(mask.sum(), 1)
+    metrics = {"loss": loss, "ppl_log": loss}
+    total = loss
+    if aux.get("moe_aux_loss") is not None and cfg.moe:
+        total = total + aux["moe_aux_loss"] / max(cfg.n_layers // cfg.moe.every_n_layers, 1)
+        metrics["moe_aux_loss"] = aux["moe_aux_loss"]
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches and decode
+# ---------------------------------------------------------------------------
+
+
+def _cache_sublayer_specs(cfg, i: int, batch: int, max_seq: int) -> dict:
+    if cfg.layer_kind(i) == "attn":
+        hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+        shape = (batch, max_seq, hkv, dh)
+        axes = ("batch", "cache_seq", "kv_heads", "head_dim")
+        return {"k": ParamSpec(shape, axes, cfg.dtype, init="zeros"),
+                "v": ParamSpec(shape, axes, cfg.dtype, init="zeros")}
+    s = cfg.ssm
+    di, h, gn = s.d_inner(cfg.d_model), s.n_heads(cfg.d_model), s.n_groups * s.d_state
+    return {
+        "ssm": ParamSpec((batch, h, s.head_dim, s.d_state),
+                         ("batch", "inner", "head_dim", "state"), jnp.float32,
+                         init="zeros"),
+        "conv_x": ParamSpec((batch, s.d_conv - 1, di),
+                            ("batch", "conv", "inner"), cfg.dtype, init="zeros"),
+        "conv_B": ParamSpec((batch, s.d_conv - 1, gn),
+                            ("batch", "conv", "state"), cfg.dtype, init="zeros"),
+        "conv_C": ParamSpec((batch, s.d_conv - 1, gn),
+                            ("batch", "conv", "state"), cfg.dtype, init="zeros"),
+    }
+
+
+def init_cache_specs(cfg, batch: int, max_seq: int) -> dict:
+    """ParamSpec tree for the decode cache (abstract-init'able for dry-run)."""
+    if cfg.family == "audio":
+        hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+        self_shape = (batch, max_seq, hkv, dh)
+        enc_len = max(max_seq // 4, 128)
+        cross_shape = (batch, enc_len, hkv, dh)
+        axes = ("batch", "cache_seq", "kv_heads", "head_dim")
+        layer = {"k": ParamSpec(self_shape, axes, cfg.dtype, init="zeros"),
+                 "v": ParamSpec(self_shape, axes, cfg.dtype, init="zeros"),
+                 "xk": ParamSpec(cross_shape, axes, cfg.dtype, init="zeros"),
+                 "xv": ParamSpec(cross_shape, axes, cfg.dtype, init="zeros")}
+        return {"decoder": stack_specs(layer, cfg.n_layers)}
+    period = _superblock_period(cfg)
+    sub = {f"sub{j}": _cache_sublayer_specs(cfg, j, batch, max_seq)
+           for j in range(period)}
+    return {"blocks": stack_specs(sub, cfg.n_layers // period)}
+
+
+def _decode_attn_sublayer(lp, cache, x, cfg, pos):
+    """x (B, 1, D); cache {k, v} (B, Smax, Hkv, Dh); pos (B,) int32."""
+    B = x.shape[0]
+    q, k, v = L.qkv_proj(lp, x)
+    q = L.rope(q, pos[:, None], cfg.rope_theta)
+    k = L.rope(k, pos[:, None], cfg.rope_theta)
+    ck = cache["k"].at[jnp.arange(B), pos].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[jnp.arange(B), pos].set(v[:, 0].astype(cache["v"].dtype))
+    out = L.decode_attention(q, ck, cv, pos)
+    return L.out_proj(lp, out), {"k": ck, "v": cv}
+
+
+def decode_step(params, cfg, cache, token, pos):
+    """One decode step.  token (B,) int32, pos (B,) int32 current positions.
+    Returns (logits (B, Vpad), new cache)."""
+    x = L.embed(params, token[:, None]).astype(cfg.dtype)    # (B, 1, D)
+
+    if cfg.family == "audio":
+        def block(x, xs):
+            lp, c = xs
+            h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            attn_out, new_c = _decode_attn_sublayer(lp["attn"], c, h, cfg, pos)
+            x = x + attn_out
+            h = L.rmsnorm(x, lp["lnx"], cfg.norm_eps)
+            q, _, _ = L.qkv_proj(lp["cross"], h)             # cross k/v cached
+            enc_len = c["xk"].shape[1]
+            out = L.decode_attention(q, c["xk"], c["xv"],
+                                     jnp.full((x.shape[0],), enc_len - 1))
+            x = x + L.out_proj(lp["cross"], out)
+            h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            x = x + L.swiglu(lp["mlp"], h)
+            new_c = dict(new_c, xk=c["xk"], xv=c["xv"])
+            return x, new_c
+
+        x, new_cache = jax.lax.scan(block, x, (params["decoder"], cache["decoder"]),
+                                    unroll=cfg.scan_unroll)
+        new_cache = {"decoder": new_cache}
+    else:
+        period = _superblock_period(cfg)
+
+        def block(x, xs):
+            blk, c = xs
+            new_c = {}
+            for j in range(period):
+                lp, cj = blk[f"sub{j}"], c[f"sub{j}"]
+                h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+                if "attn" in lp:
+                    out, new_c[f"sub{j}"] = _decode_attn_sublayer(
+                        lp["attn"], cj, h, cfg, pos)
+                    x = x + out
+                else:
+                    out, new_c[f"sub{j}"] = M.mamba_decode_step(
+                        lp["mamba"], cj, h[:, 0], cfg)
+                    x = x + out[:, None, :]
+                if "ln2" in lp:
+                    h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+                    if "moe" in lp:
+                        out, _ = MOE.moe_block(lp["moe"], h, cfg)
+                        x = x + out
+                    else:
+                        x = x + L.swiglu(lp["mlp"], h)
+            return x, new_c
+
+        x, new_cache = jax.lax.scan(block, x, (params["blocks"], cache["blocks"]),
+                                    unroll=cfg.scan_unroll)
+        new_cache = {"blocks": new_cache}
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params, x)[:, 0, :]
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg, batch: dict, max_seq: int | None = None):
+    """Run the full-context forward and build the decode cache.
+
+    Implementation note: the backbone forward is reused (so prefill == sliced
+    training forward, tested); caches are produced by re-running the qkv
+    projections per layer inside the same scan.  For mamba sublayers the
+    chunked scan's final state is the cache.
+    """
+    if cfg.family == "audio":
+        return _prefill_encdec(params, cfg, batch, max_seq)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    x = L.embed(params, tokens).astype(cfg.dtype)
+    extra = batch.get("extra_embeds")
+    if extra is not None:
+        x = jnp.concatenate([extra.astype(cfg.dtype), x], axis=1)
+        S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    period = _superblock_period(cfg)
+
+    def block(carry, blk):
+        x, aux = carry
+        caches = {}
+        for j in range(period):
+            lp = blk[f"sub{j}"]
+            h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            if "attn" in lp:
+                q, k, v = L.qkv_proj(lp["attn"], h)
+                q = L.rope(q, positions, cfg.rope_theta)
+                k = L.rope(k, positions, cfg.rope_theta)
+                if cfg.q_head_pad:
+                    g = q.shape[2] // k.shape[2]
+                    k = jnp.repeat(k, g, axis=2)
+                    v = jnp.repeat(v, g, axis=2)
+                out = L.chunked_attention(q, k, v, causal=True,
+                                          block_q=cfg.block_q,
+                                          block_kv=cfg.block_kv)
+                x = x + L.out_proj(lp["attn"], out)
+                pad = max_seq - S
+                caches[f"sub{j}"] = {
+                    "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                    "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))}
+            else:
+                out, st = _mamba_block_with_state(lp["mamba"], h, cfg)
+                x = x + out
+                caches[f"sub{j}"] = st
+            if "ln2" in lp:
+                h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+                if "moe" in lp:
+                    out, metrics = MOE.moe_block(lp["moe"], h, cfg)
+                    x = x + out
+                else:
+                    x = x + L.swiglu(lp["mlp"], h)
+        return (x, aux), caches
+
+    (x, _), cache = jax.lax.scan(_remat(block, cfg), (x, {}), params["blocks"],
+                                 unroll=cfg.scan_unroll)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params, x[:, -1:, :])[:, 0, :]
+    return logits, {"blocks": cache}
+
+
+def _mamba_block_with_state(p, x, cfg):
+    """mamba_block variant that also returns the decode state."""
+    s = cfg.ssm
+    Bsz, Sq, D = x.shape
+    H = s.n_heads(cfg.d_model)
+    Pdim = s.head_dim
+
+    z = jnp.einsum("bld,de->ble", x, p["wz"])
+    xin0 = jnp.einsum("bld,de->ble", x, p["wx"])
+    Bm0 = jnp.einsum("bld,de->ble", x, p["wB"])
+    Cm0 = jnp.einsum("bld,de->ble", x, p["wC"])
+    dt = jnp.einsum("bld,de->ble", x, p["wdt"]).astype(jnp.float32)
+
+    xin = jax.nn.silu(M._causal_conv(xin0, p["conv_x"]))
+    Bm = jax.nn.silu(M._causal_conv(Bm0, p["conv_B"])).astype(jnp.float32)
+    Cm = jax.nn.silu(M._causal_conv(Cm0, p["conv_C"])).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(Bsz, Sq, H, Pdim).astype(jnp.float32)
+    xdt = xh * dt[..., None]
+    y, S_final = M.ssd_chunked(xdt, dt * A, Bm, Cm, s.chunk,
+                               unroll=cfg.ssd_unroll)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, Sq, -1).astype(x.dtype)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["out"])
+    W = s.d_conv
+    state = {"ssm": S_final,
+             "conv_x": xin0[:, -(W - 1):, :],
+             "conv_B": Bm0[:, -(W - 1):, :],
+             "conv_C": Cm0[:, -(W - 1):, :]}
+    return out, state
+
+
+def _prefill_encdec(params, cfg, batch, max_seq):
+    src = batch["src_embeds"].astype(cfg.dtype)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    enc = _encoder_stack(params, cfg,
+                         src, jnp.arange(src.shape[1])[None, :])
+    x = L.embed(params, tokens).astype(cfg.dtype)
+    positions = jnp.arange(S)[None, :]
+
+    def block(x, lp):
+        h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_proj(lp["attn"], h)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        out = L.chunked_attention(q, k, v, causal=True, block_q=cfg.block_q,
+                                  block_kv=cfg.block_kv)
+        x = x + L.out_proj(lp["attn"], out)
+        h = L.rmsnorm(x, lp["lnx"], cfg.norm_eps)
+        qx, xk, xv = L.qkv_proj(lp["cross"], h, enc)
+        out = L.chunked_attention(qx, xk, xv, causal=False,
+                                  block_q=cfg.block_q, block_kv=cfg.block_kv)
+        x = x + L.out_proj(lp["cross"], out)
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.swiglu(lp["mlp"], h)
+        pad = max_seq - S
+        cache = {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                 "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                 "xk": xk, "xv": xv}
+        return x, cache
+
+    x, cache = jax.lax.scan(_remat(block, cfg), x, params["decoder"],
+                            unroll=cfg.scan_unroll)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params, x[:, -1:, :])[:, 0, :]
+    return logits, {"decoder": cache}

@@ -1,0 +1,271 @@
+"""Transformer building blocks: norms, RoPE, chunked flash-style attention
+(GQA), SwiGLU MLP, embeddings.  Pure functions over ParamSpec-described trees.
+
+Attention is double-chunked (scan over query blocks, online-softmax scan over
+key/value blocks) so the 32k/512k-context cells lower with O(block_q*block_kv)
+score buffers instead of O(S^2) -- this is what makes the prefill_32k dry-run
+memory-sane and is the standard TPU flash-attention formulation (the Pallas
+TPU kernel would tile identically; on this CPU container the pure-JAX version
+is the one the dry-run lowers).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .module import ParamSpec
+
+NEG_INF = -2.0 ** 30  # finite mask value: keeps fully-masked rows NaN-free
+
+
+# ---------------------------------------------------------------- norms ----
+
+def rmsnorm_spec(d: int, dtype) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), dtype, init="ones")
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope ----
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding, half-rotation convention.  x (..., S, H, Dh),
+    positions (..., S) int32 absolute positions."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs          # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                                # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ attention ----
+
+def attention_specs(cfg, *, cross: bool = False) -> dict:
+    d, h, hkv, dh = (cfg.d_model, cfg.resolved_q_heads, cfg.n_kv_heads,
+                     cfg.resolved_head_dim)
+    pd = cfg.param_dtype
+    specs = {
+        "wq": ParamSpec((d, h, dh), ("embed", "heads", "head_dim"), pd),
+        "wk": ParamSpec((d, hkv, dh), ("embed", "kv_heads", "head_dim"), pd),
+        "wv": ParamSpec((d, hkv, dh), ("embed", "kv_heads", "head_dim"), pd),
+        "wo": ParamSpec((h, dh, d), ("heads", "head_dim", "embed"), pd),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((h, dh), ("heads", "head_dim"), pd, init="zeros")
+        specs["bk"] = ParamSpec((hkv, dh), ("kv_heads", "head_dim"), pd, init="zeros")
+        specs["bv"] = ParamSpec((hkv, dh), ("kv_heads", "head_dim"), pd, init="zeros")
+    return specs
+
+
+def qkv_proj(p: dict, x: jax.Array, x_kv: jax.Array | None = None):
+    """x (B, S, D) -> q (B, S, H, Dh), k/v (B, Skv, Hkv, Dh)."""
+    x_kv = x if x_kv is None else x_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x_kv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x_kv, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+def out_proj(p: dict, attn_out: jax.Array) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", attn_out, p["wo"])
+
+
+def _gqa_scores(qb, kb, scale):
+    # qb (B, bq, Hkv, G, Dh), kb (B, bkv, Hkv, Dh) -> (B, Hkv, G, bq, bkv) f32
+    return jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      q_offset: int | jax.Array = 0, causal: bool = True,
+                      block_q: int = 512, block_kv: int = 1024) -> jax.Array:
+    """Online-softmax attention.  q (B, Sq, H, Dh); k, v (B, Skv, Hkv, Dh).
+    Query position i attends to key positions <= q_offset + i when causal.
+    Returns (B, Sq, H, Dh)."""
+    B, Sq, H, Dh = q.shape
+    Skv_real, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv_real)
+    # Pad ragged sequence lengths up to block multiples; padded keys are
+    # masked below, padded query rows are sliced away at the end.
+    q_pad = (-Sq) % bq
+    kv_pad = (-Skv_real) % bkv
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    if kv_pad:
+        k = jnp.pad(k, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+    Sq_p, Skv = Sq + q_pad, Skv_real + kv_pad
+    nq, nkv = Sq_p // bq, Skv // bkv
+
+    qr = q.reshape(B, nq, bq, Hkv, G, Dh)
+    del Sq_p
+    kr = k.reshape(B, nkv, bkv, Hkv, Dh)
+    vr = v.reshape(B, nkv, bkv, Hkv, Dh)
+
+    # Flash-attention memory discipline for backward: checkpoint each q-block
+    # so autodiff saves only the block output instead of every (bq x bkv)
+    # probability tile of the online-softmax scan (which is O(S^2) per layer;
+    # measured at 65 GB/device on qwen2 train_4k before this -- see
+    # EXPERIMENTS.md section Perf, memory iteration 1).
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def one_q_block(iq, qb):
+        qpos = q_offset + iq * bq + jnp.arange(bq)
+
+        def kv_step(carry, ikv):
+            m, l, acc = carry
+            kb = kr[:, ikv]
+            vb = vr[:, ikv]
+            s = _gqa_scores(qb, kb, scale)                     # (B,Hkv,G,bq,bkv)
+            kpos = ikv * bkv + jnp.arange(bkv)
+            mask = kpos[None, :] < Skv_real                    # exclude kv padding
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])  # (bq, bkv)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hkv, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, bq, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nkv))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out  # (B, Hkv, G, bq, Dh)
+
+    outs = jax.lax.map(lambda args: one_q_block(*args),
+                       (jnp.arange(nq), jnp.moveaxis(qr, 1, 0)))
+    # (nq, B, Hkv, G, bq, Dh) -> (B, Sq, H, Dh)
+    outs = jnp.moveaxis(outs, 0, 1).reshape(B, nq, Hkv, G, bq, Dh)
+    outs = jnp.transpose(outs, (0, 1, 4, 2, 3, 5)).reshape(B, Sq + q_pad, H, Dh)
+    return outs[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
+                     pos: jax.Array) -> jax.Array:
+    """Single-step attention against a cache.  q (B, 1, H, Dh),
+    cache (B, Smax, Hkv, Dh), pos scalar int32 = current position (attends to
+    cache[:, :pos+1]).  Dense path: GSPMD decides the collective schedule
+    (the all-gather this induces when the cache is sequence-sharded is the
+    measured baseline that flash-decoding removes -- serve/engine.py)."""
+    B, _, H, Dh = q.shape
+    Smax, Hkv = cache_k.shape[1], cache_k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    qr = q.reshape(B, Hkv, G, Dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr, cache_k,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.asarray(pos)
+    pos_b = pos.reshape(-1, 1, 1, 1) if pos.ndim else pos  # (B,) or scalar
+    mask = jnp.arange(Smax)[None, None, None, :] <= pos_b
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(cache_v.dtype), cache_v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+def decode_attention_seqsharded(q, cache_k, cache_v, pos, *, mesh, axis="model"):
+    """Flash-decoding: cache sequence-sharded over ``axis``; each shard
+    computes a partial softmax over its local keys and the partials are
+    combined with ONE psum of (numerator, denominator, max) instead of
+    all-gathering the cache/scores.  Beyond-paper optimization in the same
+    spirit as the CA fused packet: replace per-step gathers of O(S) state with
+    a single tiny reduction."""
+    from jax.sharding import PartitionSpec as P
+    B, _, H, Dh = q.shape
+    Hkv = cache_k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    n_shards = mesh.shape[axis]
+    S_local = cache_k.shape[1] // n_shards
+
+    def local(qr, kl, vl):
+        shard = jax.lax.axis_index(axis)
+        kpos = shard * S_local + jnp.arange(S_local)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qr.reshape(B, Hkv, G, Dh), kl,
+                       preferred_element_type=jnp.float32) * scale
+        pos_a = jnp.asarray(pos)
+        pos_b = pos_a.reshape(-1, 1, 1, 1) if pos_a.ndim else pos_a
+        s = jnp.where(kpos[None, None, None, :] <= pos_b, s, NEG_INF)
+        m = s.max(axis=-1)                                   # (B,Hkv,G) local max
+        p = jnp.exp(s - m[..., None])
+        num = jnp.einsum("bhgk,bkhd->bhgd", p.astype(vl.dtype), vl,
+                         preferred_element_type=jnp.float32)
+        den = p.sum(axis=-1)
+        # one fused packet: global max via two-pass-free rescale trick
+        gmax = jax.lax.pmax(m, axis)
+        r = jnp.exp(m - gmax)
+        packet = jnp.concatenate(
+            [num * r[..., None], (den * r)[..., None]], axis=-1)
+        packet = jax.lax.psum(packet, axis)                  # (B,Hkv,G,Dh+1)
+        out = packet[..., :Dh] / jnp.maximum(packet[..., Dh:], 1e-30)
+        return out.reshape(B, 1, H, Dh).astype(qr.dtype)
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(None, axis, None, None), P(None, axis, None, None)),
+        out_specs=P())
+    return fn(q, cache_k, cache_v)
+
+
+# ------------------------------------------------------------------ mlp ----
+
+def mlp_specs(cfg) -> dict:
+    d, f, pd = cfg.d_model, cfg.d_ff, cfg.param_dtype
+    return {
+        "w1": ParamSpec((d, f), ("embed", "mlp"), pd),
+        "w3": ParamSpec((d, f), ("embed", "mlp"), pd),
+        "w2": ParamSpec((f, d), ("mlp", "embed"), pd),
+    }
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w1"]))
+    g = jnp.einsum("bsd,df->bsf", x, p["w3"])
+    return jnp.einsum("bsf,fd->bsd", h * g, p["w2"])
+
+
+# ----------------------------------------------------------- embeddings ----
+
+def embed_specs(cfg) -> dict:
+    pd = cfg.param_dtype
+    specs = {"embedding": ParamSpec((cfg.padded_vocab, cfg.d_model),
+                                    ("vocab", "embed"), pd,
+                                    scale=cfg.d_model ** -0.5)}
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((cfg.d_model, cfg.padded_vocab),
+                                     ("embed", "vocab"), pd)
+    return specs
+
+
+def embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def unembed(p: dict, x: jax.Array) -> jax.Array:
+    table = p.get("lm_head")
+    if table is None:
+        return jnp.einsum("bsd,vd->bsv", x, p["embedding"])
+    return jnp.einsum("bsd,dv->bsv", x, table)

@@ -1,0 +1,214 @@
+"""Mamba-2 (SSD, state-space duality) block: chunked scan formulation.
+
+TPU adaptation: the SSD chunk decomposition is exactly the blocked form that
+feeds the MXU -- intra-chunk work is a masked (q x q) matmul, inter-chunk work
+is a sequential state pass (lax.scan) over chunk boundaries, so the O(L) scan
+touches only (B, H, P, N) states while all O(L * q) work is BLAS-3.  This is
+the same tiling a Pallas SSD kernel would use; the reference recurrence oracle
+(naive_ssd) validates it token-by-token in tests.
+
+Decode is O(1): one state update per token, no cache growth -- which is why
+the ssm/hybrid archs are the ones that run the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rmsnorm
+from .module import ParamSpec
+
+
+def mamba_specs(cfg) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    h = s.n_heads(d)
+    gn = s.n_groups * s.d_state
+    pd = cfg.param_dtype
+    return {
+        "wz": ParamSpec((d, di), ("embed", "inner"), pd),
+        "wx": ParamSpec((d, di), ("embed", "inner"), pd),
+        "wB": ParamSpec((d, gn), ("embed", "state"), pd),
+        "wC": ParamSpec((d, gn), ("embed", "state"), pd),
+        "wdt": ParamSpec((d, h), ("embed", "inner"), pd),
+        "conv_x": ParamSpec((s.d_conv, di), ("conv", "inner"), pd, scale=0.5),
+        "conv_B": ParamSpec((s.d_conv, gn), ("conv", "state"), pd, scale=0.5),
+        "conv_C": ParamSpec((s.d_conv, gn), ("conv", "state"), pd, scale=0.5),
+        "A_log": ParamSpec((h,), ("inner",), jnp.float32, init="zeros"),
+        "D": ParamSpec((h,), ("inner",), jnp.float32, init="ones"),
+        "dt_bias": ParamSpec((h,), ("inner",), jnp.float32, init="zeros"),
+        "norm": ParamSpec((di,), ("inner",), pd, init="ones"),
+        "out": ParamSpec((di, d), ("inner", "embed"), pd),
+    }
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array) -> jax.Array:
+    """Depthwise causal conv; x (B, L, C), kernel (W, C)."""
+    W = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * kernel[i][None, None, :]
+              for i in range(W))
+    return out
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a (..., q) -> (..., q, q) with ss[i, j] = sum_{k=j+1..i} a_k (i >= j)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    ss = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def ssd_chunked(xdt: jax.Array, dtA: jax.Array, Bm: jax.Array, Cm: jax.Array,
+                chunk: int, S0: jax.Array | None = None, unroll: int = 1):
+    """SSD scan.  xdt (B, L, H, P) = x * dt; dtA (B, L, H) = dt * A (negative);
+    Bm, Cm (B, L, N) (single group broadcast over heads).
+    Returns (y (B, L, H, P), final state (B, H, P, N))."""
+    Bsz, L, H, Pdim = xdt.shape
+    N = Bm.shape[-1]
+    q = min(chunk, L)
+    pad = (-L) % q
+    if pad:
+        # Zero padding is state-neutral: dtA=0 => decay exp(0)=1, xdt=0 =>
+        # no input; padded outputs are sliced off below.
+        widths = lambda t: [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2)
+        xdt = jnp.pad(xdt, widths(xdt))
+        dtA = jnp.pad(dtA, widths(dtA))
+        Bm = jnp.pad(Bm, widths(Bm))
+        Cm = jnp.pad(Cm, widths(Cm))
+    L_p = L + pad
+    nc = L_p // q
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(Bsz, nc, q, *t.shape[2:]), 1, 0)
+
+    xs = (to_chunks(xdt), to_chunks(dtA), to_chunks(Bm), to_chunks(Cm))
+    S_init = (jnp.zeros((Bsz, H, Pdim, N), jnp.float32)
+              if S0 is None else S0.astype(jnp.float32))
+
+    def chunk_step(S, inp):
+        xc, ac, bc, cc = inp            # (B,q,H,P), (B,q,H), (B,q,N), (B,q,N)
+        cum = jnp.cumsum(ac, axis=1)                       # (B,q,H)
+        Lmat = jnp.exp(_segsum(jnp.moveaxis(ac, -1, 1)))   # (B,H,q,q)
+        y_diag = jnp.einsum("bqn,bkn,bhqk,bkhp->bqhp", cc, bc, Lmat, xc,
+                            preferred_element_type=jnp.float32)
+        decay_out = jnp.exp(cum)                           # (B,q,H)
+        y_off = jnp.einsum("bqn,bhpn,bqh->bqhp", cc, S, decay_out,
+                           preferred_element_type=jnp.float32)
+        decay_states = jnp.exp(cum[:, -1:, :] - cum)       # (B,q,H)
+        S_new = S * jnp.exp(cum[:, -1, :])[:, :, None, None] + jnp.einsum(
+            "bkn,bkh,bkhp->bhpn", bc, decay_states, xc,
+            preferred_element_type=jnp.float32)
+        return S_new, y_diag + y_off
+
+    S, ys = jax.lax.scan(chunk_step, S_init, xs, unroll=unroll)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, L_p, H, Pdim)
+    return y[:, :L], S
+
+
+def naive_ssd(xdt, dtA, Bm, Cm, S0=None):
+    """Token-by-token recurrence oracle: S_t = S_{t-1} exp(dtA_t) + B_t (x dt)_t."""
+    Bsz, L, H, Pdim = xdt.shape
+    N = Bm.shape[-1]
+    S = jnp.zeros((Bsz, H, Pdim, N), jnp.float32) if S0 is None else S0
+
+    def step(S, inp):
+        xt, at, bt, ct = inp           # (B,H,P), (B,H), (B,N), (B,N)
+        S = S * jnp.exp(at)[:, :, None, None] + jnp.einsum("bhp,bn->bhpn", xt, bt)
+        y = jnp.einsum("bhpn,bn->bhp", S, ct)
+        return S, y
+
+    xs = (jnp.moveaxis(xdt, 1, 0), jnp.moveaxis(dtA, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    S, ys = jax.lax.scan(step, S, xs)
+    return jnp.moveaxis(ys, 0, 1), S
+
+
+def mamba_block(p: dict, x: jax.Array, cfg) -> jax.Array:
+    """Full Mamba-2 block forward; x (B, L, D) -> (B, L, D)."""
+    s = cfg.ssm
+    Bsz, L, D = x.shape
+    di = s.d_inner(cfg.d_model)
+    H = s.n_heads(cfg.d_model)
+    Pdim = s.head_dim
+
+    z = jnp.einsum("bld,de->ble", x, p["wz"])
+    xin = jnp.einsum("bld,de->ble", x, p["wx"])
+    Bm = jnp.einsum("bld,de->ble", x, p["wB"])
+    Cm = jnp.einsum("bld,de->ble", x, p["wC"])
+    dt = jnp.einsum("bld,de->ble", x, p["wdt"]).astype(jnp.float32)
+
+    xin = jax.nn.silu(_causal_conv(xin, p["conv_x"]))
+    Bm = jax.nn.silu(_causal_conv(Bm, p["conv_B"])).astype(jnp.float32)
+    Cm = jax.nn.silu(_causal_conv(Cm, p["conv_C"])).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])                 # (B,L,H)
+    A = -jnp.exp(p["A_log"])                                # (H,) negative
+    xh = xin.reshape(Bsz, L, H, Pdim).astype(jnp.float32)
+    xdt = xh * dt[..., None]
+    dtA = dt * A
+
+    y, _ = ssd_chunked(xdt, dtA, Bm, Cm, s.chunk, unroll=cfg.ssd_unroll)
+    y = y + xh * p["D"][None, None, :, None]                # skip connection
+    y = y.reshape(Bsz, L, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return jnp.einsum("ble,ed->bld", y, p["out"])
+
+
+# ------------------------------------------------------------- decode ----
+
+def mamba_state_init(cfg, batch: int) -> dict:
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    H = s.n_heads(cfg.d_model)
+    gn = s.n_groups * s.d_state
+    W = s.d_conv
+    return {
+        "ssm": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+        "conv_x": jnp.zeros((batch, W - 1, di), cfg.dtype),
+        "conv_B": jnp.zeros((batch, W - 1, gn), cfg.dtype),
+        "conv_C": jnp.zeros((batch, W - 1, gn), cfg.dtype),
+    }
+
+
+def _conv_step(buf: jax.Array, xt: jax.Array, kernel: jax.Array):
+    """One causal-conv step; buf (B, W-1, C) history, xt (B, C)."""
+    window = jnp.concatenate([buf, xt[:, None, :]], axis=1)   # (B, W, C)
+    out = jnp.einsum("bwc,wc->bc", window, kernel)
+    return window[:, 1:, :], out
+
+
+def mamba_decode_step(p: dict, state: dict, xt: jax.Array, cfg):
+    """One-token state update; xt (B, D) -> ((B, D), new state).  O(1) in L."""
+    s = cfg.ssm
+    Bsz, D = xt.shape
+    H = s.n_heads(cfg.d_model)
+    Pdim = s.head_dim
+
+    z = xt @ p["wz"]
+    xin = xt @ p["wx"]
+    Bm = xt @ p["wB"]
+    Cm = xt @ p["wC"]
+    dt = (xt @ p["wdt"]).astype(jnp.float32)
+
+    conv_x, xin = _conv_step(state["conv_x"], xin, p["conv_x"])
+    conv_B, Bm = _conv_step(state["conv_B"], Bm, p["conv_B"])
+    conv_C, Cm = _conv_step(state["conv_C"], Cm, p["conv_C"])
+    xin, Bm, Cm = jax.nn.silu(xin), jax.nn.silu(Bm), jax.nn.silu(Cm)
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])                  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(Bsz, H, Pdim).astype(jnp.float32)
+    S = state["ssm"] * jnp.exp(dt * A)[:, :, None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xh * dt[..., None], Bm.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", S, Cm.astype(jnp.float32))
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(Bsz, -1).astype(xt.dtype)
+    y = rmsnorm((y * jax.nn.silu(z))[:, None, :], p["norm"], cfg.norm_eps)[:, 0]
+    out = y @ p["out"]
+    new_state = {"ssm": S, "conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C}
+    return out, new_state

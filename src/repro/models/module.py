@@ -1,0 +1,84 @@
+"""Minimal functional module system: parameter trees described by ParamSpec.
+
+Every model declares a nested dict of ParamSpec (shape + logical axes + init).
+From that single description we derive:
+  * materialized parameters (init_params) for real runs,
+  * abstract ShapeDtypeStructs with NamedShardings (abstract_params) for the
+    multi-pod dry-run -- no allocation ever happens for the full configs,
+  * sharding specs for jit in_shardings (via repro.models.sharding).
+
+Keeping shapes and shardings in one tree prevents init/spec drift by
+construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]      # logical axis names, len == ndim
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"              # normal | zeros | ones | scaled
+    scale: float | None = None        # stddev; default 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"axes {self.axes} do not match shape {self.shape}")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def stack_specs(tree, n: int, axis_name: str = "layers"):
+    """Prepend a stacking dimension (for scan-over-layers parameter layout)."""
+    return tree_map_specs(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.dtype,
+                            s.init, s.scale), tree)
+
+
+def _init_one(spec: ParamSpec, key) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    # fan-in scaled normal: last-but-one axis is the contraction by convention
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    scale = spec.scale if spec.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (scale * jax.random.normal(key, spec.shape, jnp.float32)).astype(spec.dtype)
+
+
+def init_params(tree, key: jax.Array):
+    """Materialize a ParamSpec tree into arrays (deterministic in key)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(tree, sharding_fn):
+    """ShapeDtypeStruct tree with shardings; ``sharding_fn(spec) -> Sharding``."""
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sharding_fn(s)),
+        tree)
+
+
+def param_count(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    return sum(math.prod(s.shape) for s in leaves)
+
+
+def param_bytes(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    return sum(math.prod(s.shape) * jnp.dtype(s.dtype).itemsize for s in leaves)

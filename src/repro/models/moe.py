@@ -1,0 +1,113 @@
+"""Mixture-of-Experts block: top-k routing with sort-based capacity dispatch.
+
+Sort-based dispatch (argsort by expert id + positional ranking) avoids the
+O(tokens * experts * capacity) one-hot dispatch tensors that make einsum-MoE
+unloweable at 32k contexts; the per-expert buffers are (E, C, D) with
+C = ceil(tokens * k / E * capacity_factor).  Experts are sharded over the
+'model' mesh axis (EP=16 for the 16-expert archs) and the scatter/gather pair
+lowers to all-to-alls under GSPMD -- the collective-bound behaviour the
+roofline section measures for dbrx/phi3.5/jamba.
+
+Overflowed tokens (beyond capacity) are dropped (their combine weight is 0 and
+the residual connection carries them) -- the Switch/GShard convention; drop
+fraction is returned as a metric and tested.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .module import ParamSpec
+
+
+def moe_specs(cfg) -> dict:
+    d, f, pd = cfg.d_model, cfg.d_ff, cfg.param_dtype
+    e = cfg.moe.num_experts
+    return {
+        "router": ParamSpec((d, e), ("embed", None), jnp.float32),
+        "w1": ParamSpec((e, d, f), ("expert", "embed", "mlp"), pd),
+        "w3": ParamSpec((e, d, f), ("expert", "embed", "mlp"), pd),
+        "w2": ParamSpec((e, f, d), ("expert", "mlp", "embed"), pd),
+    }
+
+
+def _capacity(tokens: int, k: int, e: int, factor: float) -> int:
+    cap = int(tokens * k / e * factor)
+    return max(8, -(-cap // 8) * 8)  # pad to 8 for clean layouts
+
+
+def moe_block(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, dict]:
+    """x (B, S, D) -> (B, S, D), metrics.  Top-k routing, capacity C.
+
+    With ``cfg.moe.groups > 1`` the dispatch (sort, ranking, capacity) runs
+    independently per token group (GShard convention).  The group dim inherits
+    the batch sharding, so sorting becomes a *batched local* sort -- no
+    cross-shard collective -- and capacity is enforced per group.  Measured in
+    EXPERIMENTS.md section Perf C2.
+    """
+    mcfg = cfg.moe
+    B, S, D = x.shape
+    T_all = B * S
+    G = mcfg.groups
+    if G > 1:
+        if T_all % G:
+            raise ValueError(f"tokens {T_all} not divisible by groups {G}")
+        xg = x.reshape(G, T_all // G, D)
+        outs, metrics = jax.vmap(
+            lambda xs: _moe_dispatch(p, xs, cfg))(xg)
+        out = outs.reshape(B, S, D)
+        return out, {k: v.mean() for k, v in metrics.items()}
+    out, metrics = _moe_dispatch(p, x.reshape(T_all, D), cfg)
+    return out.reshape(B, S, D), metrics
+
+
+def _moe_dispatch(p: dict, xf: jax.Array, cfg) -> tuple[jax.Array, dict]:
+    """Sort-based top-k dispatch over a flat token group xf (T, D)."""
+    mcfg = cfg.moe
+    T, D = xf.shape
+    E, K = mcfg.num_experts, mcfg.top_k
+    C = _capacity(T, K, E, mcfg.capacity_factor)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, sel = jax.lax.top_k(probs, K)                     # (T, K)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)  # renormalize top-k
+
+    # ---- sort-based dispatch ------------------------------------------
+    expert_flat = sel.reshape(T * K)
+    token_flat = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    gate_flat = gate.reshape(T * K)
+    order = jnp.argsort(expert_flat)                        # stable
+    e_sorted = expert_flat[order]
+    t_sorted = token_flat[order]
+    g_sorted = gate_flat[order]
+    counts = jnp.bincount(expert_flat, length=E)            # tokens per expert
+    starts = jnp.cumsum(counts) - counts                    # exclusive prefix
+    pos_in_expert = jnp.arange(T * K) - starts[e_sorted]
+    keep = pos_in_expert < C
+    dest = jnp.where(keep, e_sorted * C + pos_in_expert, E * C)  # E*C = drop slot
+
+    # gather tokens into (E*C, D) buffers (dropped -> ignored via mode="drop")
+    buf = jnp.zeros((E * C, D), xf.dtype)
+    buf = buf.at[dest].set(xf[t_sorted], mode="drop")
+    buf = buf.reshape(E, C, D)
+
+    # ---- expert computation (EP over 'model' via w sharding) -----------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w1"]))
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h * g, p["w2"]).reshape(E * C, D)
+
+    # ---- combine --------------------------------------------------------
+    slot_out = jnp.where(keep[:, None],
+                         jnp.take(out_buf, jnp.minimum(dest, E * C - 1), axis=0),
+                         0.0)
+    out = jnp.zeros((T, D), jnp.float32).at[t_sorted].add(
+        slot_out.astype(jnp.float32) * g_sorted[:, None])
+
+    # ---- aux losses / metrics ------------------------------------------
+    me = probs.mean(axis=0)                                  # mean router prob
+    ce = jnp.bincount(sel.reshape(-1), length=E).astype(jnp.float32) / (T * K)
+    aux = E * jnp.sum(me * ce) * mcfg.aux_loss_weight        # Switch LB loss
+    drop_frac = 1.0 - keep.sum().astype(jnp.float32) / (T * K)
+    return out.astype(xf.dtype), {
+        "moe_aux_loss": aux, "moe_drop_frac": drop_frac}

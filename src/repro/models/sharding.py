@@ -1,0 +1,104 @@
+"""Logical-axis -> mesh-axis sharding rules with divisibility guards.
+
+MaxText-style rule tables.  A logical axis maps to a tuple of mesh axes; the
+guard drops any mapping whose mesh-axis product does not divide the dimension
+(e.g. llama3.2's 24 query heads cannot shard over model=16 and fall back to
+replication -- recorded so the roofline report can call it out) and any mesh
+axis that is absent from the current mesh (so single-pod and multi-pod meshes
+share one rule table: 'pod' simply vanishes on the 16x16 mesh).
+
+Vocab dims are padded (configs.pad_vocab) rather than guarded -- the standard
+Megatron treatment -- because replicating a 131k x d_model embedding is never
+acceptable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .module import ParamSpec
+
+# One shared rule table.  "fsdp" entries are merged in when the config asks
+# for parameter sharding over the data axis (ZeRO-3 style for the >100B archs).
+BASE_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "inner": ("model",),        # mamba d_inner / heads
+    "cache_seq": (),            # overridden to ("model",) for seq-sharded decode
+    "seq": (),
+    "embed": (),
+    "layers": (),
+    "head_dim": (),
+    "state": (),
+    "conv": (),
+    "capacity": (),
+    "data_points": ("pod", "data", "model"),  # solver 1D-block-column layout
+    "features": ("pod", "data", "model"),     # solver 1D-block-row layout
+}
+
+FSDP_RULES = {
+    "embed": ("data",),         # shard the non-TP dim of weight matrices
+}
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Mesh
+    rules: dict[str, tuple[str, ...]]
+    dropped: list  # (axes, dim, logical, reason) audit trail
+
+    def spec_for(self, shape: tuple[int, ...], axes: tuple[str | None, ...]) -> P:
+        used: set[str] = set()
+        parts = []
+        for dim, logical in zip(shape, axes):
+            choice = None
+            if logical is not None:
+                candidates = self.rules.get(logical, ())
+                # keep only axes present in the mesh and not yet used
+                cand = tuple(a for a in candidates
+                             if a in self.mesh.shape and a not in used)
+                # try the full tuple, then prefixes, then singletons
+                options = []
+                if cand:
+                    options.append(cand)
+                    options.extend((a,) for a in cand if len(cand) > 1)
+                for opt in options:
+                    size = math.prod(self.mesh.shape[a] for a in opt)
+                    if dim % size == 0:
+                        choice = opt
+                        used.update(opt)
+                        break
+                if choice is None and cand:
+                    self.dropped.append((logical, dim, cand, "indivisible"))
+            parts.append(choice if choice is None or len(choice) > 1
+                         else choice[0])
+        # PartitionSpec wants None for replicated dims
+        return P(*[p if p else None for p in parts])
+
+    def sharding_for(self, spec: ParamSpec) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(spec.shape, spec.axes))
+
+    def named(self, shape, axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(shape, axes))
+
+
+def make_rules(mesh: Mesh, *, fsdp: bool = False,
+               overrides: dict[str, tuple[str, ...]] | None = None) -> ShardingRules:
+    rules = dict(BASE_RULES)
+    if fsdp:
+        rules.update(FSDP_RULES)
+    if overrides:
+        rules.update(overrides)
+    return ShardingRules(mesh, rules, dropped=[])
+
+
+def constrain(x, rules: ShardingRules, axes: tuple[str | None, ...]):
+    """with_sharding_constraint by logical axes (activation annotations)."""
+    return jax.lax.with_sharding_constraint(x, rules.named(x.shape, axes))

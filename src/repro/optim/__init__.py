@@ -1,0 +1,6 @@
+from .adamw import (AdamWConfig, adamw_update, init_opt_state,
+                    opt_state_specs)
+from .schedules import cosine_warmup
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state", "opt_state_specs",
+           "cosine_warmup"]

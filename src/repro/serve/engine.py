@@ -1,0 +1,194 @@
+"""Batched serving engine: slot-based continuous batching.
+
+Production shape (vLLM-style, sized down to this framework's scope):
+  * fixed decode batch of ``slots``; each slot owns a stripe of every cache
+    leaf (slot axis = axis 1; axis 0 is the scanned layer stack),
+  * prompts are prefetched into free slots by a bucketed prefill (prompt
+    lengths padded to a power-of-two bucket so each bucket compiles once;
+    right padding is safe because decode masks keys at positions > pos),
+  * every engine.step() decodes ALL slots in one jit'd call (inactive slots
+    compute garbage that is never read -- the fixed-shape SPMD trade),
+  * greedy or temperature sampling, EOS + max-len retirement.
+
+serve_step == decode_step is exactly what the decode_32k / long_500k dry-run
+cells lower at the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api, init_params
+from repro.models.module import ParamSpec
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_seq: int = 1024
+    slots: int = 4
+    temperature: float = 0.0
+    eos_id: int | None = None
+    seed: int = 0
+    min_bucket: int = 32
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    prompt: list
+    out: list
+    slot: int = -1
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, model_cfg, params, cfg: ServeConfig):
+        self.mc = model_cfg
+        self.cfg = cfg
+        self.params = params
+        cache_specs = api.init_cache_specs(model_cfg, cfg.slots, cfg.max_seq)
+        self.cache = init_params(cache_specs, jax.random.key(0))  # zeros
+        self.pos = np.zeros((cfg.slots,), np.int32)       # next write position
+        self.active = np.zeros((cfg.slots,), bool)
+        self.slot_req: list[int | None] = [None] * cfg.slots
+        self.queue: list[_Request] = []
+        self.requests: dict[int, _Request] = {}
+        self._next_rid = 0
+        self._key = jax.random.key(cfg.seed)
+
+        self._decode = jax.jit(self._decode_impl, donate_argnums=1)
+        self._prefill_cache = {}
+
+    # ------------------------------------------------------------ public --
+    def add_request(self, prompt_tokens) -> int:
+        prompt_tokens = list(map(int, prompt_tokens))
+        if self.mc.family in ("ssm", "hybrid"):
+            # SSM recurrences are not mask-protected: right padding would
+            # pollute conv/ssm states.  Standard chunked-prefill constraint:
+            # prompts must align to the SSD chunk so prefill runs unpadded.
+            chunk = self.mc.ssm.chunk
+            if len(prompt_tokens) % chunk:
+                raise ValueError(
+                    f"{self.mc.name}: prompt length {len(prompt_tokens)} must "
+                    f"be a multiple of the SSD chunk ({chunk}) -- align or "
+                    f"truncate the prompt (chunked-prefill constraint)")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = _Request(rid, prompt_tokens, [])
+        self.queue.append(req)
+        self.requests[rid] = req
+        return rid
+
+    def step(self) -> dict[int, int]:
+        """Admit queued requests, decode one token for all active slots.
+        Returns {rid: new_token} for slots that produced a token."""
+        self._admit()
+        if not self.active.any():
+            return {}
+        tok = np.zeros((self.cfg.slots,), np.int32)
+        for s in range(self.cfg.slots):
+            if self.active[s]:
+                req = self.requests[self.slot_req[s]]
+                tok[s] = (req.out[-1] if req.out else req.prompt[-1])
+        self._key, k = jax.random.split(self._key)
+        logits, self.cache, sampled = self._decode(
+            self.params, self.cache, jnp.asarray(tok),
+            jnp.asarray(self.pos), k)
+        sampled = np.asarray(sampled)
+        out = {}
+        for s in range(self.cfg.slots):
+            if not self.active[s]:
+                continue
+            t = int(sampled[s])
+            req = self.requests[self.slot_req[s]]
+            req.out.append(t)
+            out[req.rid] = t
+            self.pos[s] += 1
+            if ((self.cfg.eos_id is not None and t == self.cfg.eos_id)
+                    or self.pos[s] >= self.cfg.max_seq):
+                self._retire(s)
+        return out
+
+    def generate(self, prompts, max_new: int) -> list[list[int]]:
+        rids = [self.add_request(p) for p in prompts]
+        budget = {r: max_new for r in rids}
+        while any(not self.requests[r].done and budget[r] > 0 for r in rids):
+            produced = self.step()
+            for r, _ in produced.items():
+                if r in budget:
+                    budget[r] -= 1
+                    if budget[r] == 0 and not self.requests[r].done:
+                        self._retire(self.requests[r].slot)
+            if not produced and not self.queue:
+                break
+        return [self.requests[r].out for r in rids]
+
+    # ----------------------------------------------------------- internal --
+    def _decode_impl(self, params, cache, tok, pos, key):
+        logits, cache = api.decode_step(params, self.mc, cache, tok, pos)
+        logits = logits[:, :self.mc.vocab]           # mask vocab padding
+        if self.cfg.temperature > 0:
+            sampled = jax.random.categorical(
+                key, logits / self.cfg.temperature, axis=-1)
+        else:
+            sampled = jnp.argmax(logits, axis=-1)
+        return logits, cache, sampled.astype(jnp.int32)
+
+    def _bucket(self, n: int) -> int:
+        b = self.cfg.min_bucket
+        while b < n:
+            b *= 2
+        return min(b, self.cfg.max_seq)
+
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefill_cache:
+            def fn(params, tokens, last_pos):
+                batch = {"tokens": tokens}
+                logits, cache = api.prefill(params, self.mc, batch,
+                                            max_seq=self.cfg.max_seq)
+                return logits, cache
+            self._prefill_cache[bucket] = jax.jit(fn)
+        return self._prefill_cache[bucket]
+
+    def _admit(self) -> None:
+        for s in range(self.cfg.slots):
+            if self.active[s] or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            plen = len(req.prompt)
+            # ssm/hybrid: exact (chunk-aligned) prefill; attention: padded
+            # power-of-two bucket (padding is attention-mask safe).
+            bucket = plen if self.mc.family in ("ssm", "hybrid") \
+                else self._bucket(plen)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :plen] = req.prompt[:bucket]
+            logits, cache1 = self._prefill_fn(bucket)(
+                self.params, jnp.asarray(toks), jnp.asarray([plen - 1]))
+            # copy the single-request cache stripe into slot s (axis 1:
+            # axis 0 is the scanned layer stack).
+            self.cache = jax.tree.map(
+                lambda full, one: full.at[:, s].set(one[:, 0]),
+                self.cache, cache1)
+            # first generated token comes from the prefill logits at the last
+            # *real* prompt position: with right padding that is plen-1 ==
+            # bucket-1 only when plen == bucket, so decode re-scores from the
+            # last prompt token instead of trusting padded prefill logits.
+            req.slot = s
+            self.slot_req[s] = req.rid
+            self.pos[s] = plen - 1
+            self.active[s] = True
+            # replay the last prompt token through decode to get clean logits
+            # at position plen-1 (also refreshes that cache row).
+            req.out = []
+
+    def _retire(self, slot: int) -> None:
+        rid = self.slot_req[slot]
+        if rid is not None:
+            self.requests[rid].done = True
+        self.active[slot] = False
+        self.slot_req[slot] = None
+        self.pos[slot] = 0

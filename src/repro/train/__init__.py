@@ -1,0 +1,7 @@
+from .trainer import (TrainState, Trainer, TrainRunConfig, make_train_step,
+                      train_state_specs, train_step_shardings)
+from .elastic import reshard_state, plan_mesh
+
+__all__ = ["TrainState", "Trainer", "TrainRunConfig", "make_train_step",
+           "train_state_specs", "train_step_shardings", "reshard_state",
+           "plan_mesh"]

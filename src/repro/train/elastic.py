@@ -1,0 +1,41 @@
+"""Elastic scaling: restart the same logical job on a different device count.
+
+Checkpoints store logical (unsharded) arrays, so elasticity is a placement
+problem: build the mesh for the new world size, re-derive shardings from the
+same rule table, and device_put.  plan_mesh keeps the TP degree at most the
+requested width and folds everything else into (pod x data); divisibility
+guards in the rule table absorb shapes that stop dividing after a resize.
+
+Straggler/failure story at 1000+ nodes (DESIGN.md section 3): a failed pod
+drops out, the job restarts from the newest valid checkpoint (CRC-verified,
+next-older fallback) on the surviving world size, and the data stream resumes
+exactly (counter-based Philox keyed by step).  The s-step solver layer reduces
+sync frequency by s, which directly shrinks the window in which a straggler
+can stall the collective.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.sharding import make_rules
+from .trainer import train_step_shardings
+
+
+def plan_mesh(n_devices: int, tp: int = 16, pods: int | None = None):
+    """Choose (pod, data, model) for a world size.  TP degree never exceeds
+    the device count; the data axis absorbs the remainder."""
+    tp = min(tp, n_devices)
+    while n_devices % tp:
+        tp //= 2
+    rest = n_devices // tp
+    if pods and rest % pods == 0 and pods > 1:
+        return jax.make_mesh((pods, rest // pods, tp), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh((rest, tp), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def reshard_state(state, model_cfg, new_mesh):
+    """Place a (host or differently-sharded) train state onto new_mesh."""
+    sh, _ = train_step_shardings(model_cfg, new_mesh)
+    return jax.tree.map(lambda a, s: jax.device_put(a, s), state, sh)

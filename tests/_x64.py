@@ -1,0 +1,11 @@
+"""Module-scoped x64 toggle for solver-exactness tests."""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def x64_mode():
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)

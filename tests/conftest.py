@@ -1,0 +1,15 @@
+import pytest
+from hypothesis import HealthCheck, settings
+
+# Keep the device world at 1 (the multi-pod dry-run runs in its own process);
+# distributed tests spawn subprocesses with their own XLA_FLAGS.
+settings.register_profile(
+    "ci", max_examples=20, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+settings.load_profile("ci")
+
+
+@pytest.fixture()
+def rng_key():
+    import jax
+    return jax.random.key(0)

@@ -1,0 +1,79 @@
+"""Cost-model (Table 1/2, Fig 8/9) verification: the structural claims of the
+paper hold in our alpha-beta-gamma implementation."""
+import numpy as np
+
+from repro.core.cost_model import (CORI_MPI, CORI_SPARK, bcd_costs, bdcd_costs,
+                                   best_s, cg_costs, strong_scaling,
+                                   tsqr_costs, weak_scaling)
+
+D, N, P, B, H = 1024, 2 ** 22, 1024, 4, 1000
+
+
+def test_table1_latency_drops_by_s():
+    c1 = bcd_costs(D, N, P, B, H, s=1)
+    c8 = bcd_costs(D, N, P, B, H, s=8)
+    assert abs(c1.latency / c8.latency - 8) < 1e-9
+
+
+def test_table1_bandwidth_grows_by_about_s():
+    c1 = bcd_costs(D, N, P, B, H, s=1)
+    c8 = bcd_costs(D, N, P, B, H, s=8)
+    ratio = c8.bandwidth / c1.bandwidth
+    assert 4 < ratio < 9  # O(s) growth (paper: exactly s at leading order)
+
+
+def test_table1_flops_grow_by_about_s():
+    c1 = bcd_costs(D, N, P, B, H, s=1)
+    c8 = bcd_costs(D, N, P, B, H, s=8)
+    assert 4 < c8.flops / c1.flops < 9
+
+
+def test_table1_memory_grows_s_squared_term():
+    c1 = bcd_costs(D, N, P, B, H, s=1)
+    c8 = bcd_costs(D, N, P, B, H, s=8)
+    assert (c8.memory - c1.memory) > 0.8 * (8 ** 2 - 1) * B * B
+
+
+def test_bdcd_mirrors_bcd():
+    cp = bcd_costs(D, N, P, B, H, s=4)
+    cd = bdcd_costs(N, D, P, B, H, s=4)  # transposed problem
+    assert abs(cp.flops / cd.flops - 1) < 0.1
+    assert cp.latency == cd.latency
+
+
+def test_best_s_never_worse_than_classical():
+    for machine in (CORI_MPI, CORI_SPARK):
+        t1 = bcd_costs(D, N, P, B, H, 1).time(machine)
+        _, ts = best_s(bcd_costs, machine, D, N, P, B, H)
+        assert ts <= t1
+
+
+def test_fig8_strong_scaling_speedups():
+    """Modeled strong-scaling speedup reaches the paper's order of magnitude:
+    ~14x (MPI) and >100x (Spark) at large P."""
+    Ps = [2 ** k for k in range(2, 29, 2)]
+    mpi = strong_scaling(CORI_MPI, d=1024, n=2 ** 35, b=4, H=1000, Ps=Ps)
+    spark = strong_scaling(CORI_SPARK, d=1024, n=2 ** 40, b=4, H=1000, Ps=Ps)
+    assert mpi["speedup"].max() > 5
+    assert spark["speedup"].max() > 100
+    # speedup grows as communication starts to dominate
+    assert mpi["speedup"][-1] > mpi["speedup"][0]
+
+
+def test_fig9_weak_scaling_speedups():
+    Ps = [2 ** k for k in range(2, 29, 2)]
+    mpi = weak_scaling(CORI_MPI, d=1024, n_per_P=2 ** 11, b=4, H=1000, Ps=Ps)
+    spark = weak_scaling(CORI_SPARK, d=1024, n_per_P=2 ** 11, b=4, H=1000,
+                         Ps=Ps)
+    assert mpi["speedup"].max() > 5
+    assert spark["speedup"].max() > 100
+
+
+def test_table2_tsqr_single_reduction():
+    assert tsqr_costs(D, N, P).latency < cg_costs(D, N, P, 100).latency
+
+
+def test_costs_positive():
+    for c in (bcd_costs(D, N, P, B, H, 4), bdcd_costs(D, N, P, B, H, 4),
+              cg_costs(D, N, P, 50), tsqr_costs(D, N, P)):
+        assert min(c.flops, c.latency, c.bandwidth, c.memory) > 0

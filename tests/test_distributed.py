@@ -1,0 +1,40 @@
+"""Multi-device (8 simulated CPU devices) integration tests.  Each case runs
+in a subprocess so the main pytest world stays at 1 device (the dry-run's 512
+likewise lives in its own process)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = os.path.join(os.path.dirname(__file__), "dist_checks.py")
+_SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+def _run(check: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(_SRC) + os.pathsep + \
+        os.path.dirname(__file__) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, _SCRIPT, check], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, (
+        f"{check} failed:\nSTDOUT:\n{proc.stdout[-3000:]}\n"
+        f"STDERR:\n{proc.stderr[-3000:]}")
+    assert f"{check} OK" in proc.stdout
+
+
+def test_distributed_solver_equivalence():
+    _run("solver_equivalence")
+
+
+def test_collective_count_reduction_by_s():
+    _run("collective_counts")
+
+
+def test_flash_decode_seqsharded():
+    _run("flash_decode")
+
+
+@pytest.mark.slow
+def test_elastic_reshard():
+    _run("elastic_reshard")

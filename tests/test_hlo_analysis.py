@@ -1,0 +1,66 @@
+"""HLO collective-parser unit tests against synthetic and real HLO text."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+
+from repro.core.hlo_analysis import collective_summary, parse_collectives
+
+SYNTH = """
+HloModule test
+%x = f32[128,64]{1,0} parameter(0)
+%ar = f32[128,64]{1,0} all-reduce(%x), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%add
+%ag = bf16[256,64]{1,0} all-gather(%y), channel_id=2, replica_groups=[2,4]<=[8], dimensions={0}
+%rs = f32[16,64]{1,0} reduce-scatter(%z), channel_id=3, replica_groups=[1,8]<=[8], dimensions={0}
+%cp = f32[128]{0} collective-permute(%w), channel_id=4, source_target_pairs={{0,1}}
+%done = f32[4]{0} all-reduce-done(%start)
+%a2a = f32[8,8]{1,0} all-to-all(%v), channel_id=5, replica_groups=[2,4]<=[8], dimensions={0}
+"""
+
+
+def test_parse_kinds_and_counts():
+    ops = parse_collectives(SYNTH)
+    kinds = sorted(o.kind for o in ops)
+    assert kinds == ["all-gather", "all-reduce", "all-to-all",
+                     "collective-permute", "reduce-scatter"]
+
+
+def test_operand_byte_conventions():
+    ops = {o.kind: o for o in parse_collectives(SYNTH)}
+    assert ops["all-reduce"].operand_bytes == 128 * 64 * 4
+    # all-gather operand = result / group_size (group 4)
+    assert ops["all-gather"].operand_bytes == 256 * 64 * 2 / 4
+    # reduce-scatter operand = result * group_size (group 8)
+    assert ops["reduce-scatter"].operand_bytes == 16 * 64 * 4 * 8
+    assert ops["collective-permute"].operand_bytes == 128 * 4
+    assert ops["all-to-all"].operand_bytes == 8 * 8 * 4
+
+
+def test_ring_model_bytes():
+    ops = {o.kind: o for o in parse_collectives(SYNTH)}
+    # AR ring: 2 (g-1)/g * bytes, g=4
+    assert abs(ops["all-reduce"].link_bytes - 2 * 0.75 * 128 * 64 * 4) < 1
+    assert ops["all-reduce"].group_size == 4
+
+
+def test_done_ops_skipped():
+    assert all(o.kind != "all-reduce-done" for o in parse_collectives(SYNTH))
+
+
+def test_summary_aggregation():
+    s = collective_summary(SYNTH)
+    assert s.count == 5
+    assert s.operand_bytes > 0 and s.link_bytes > 0
+    assert set(s.by_kind) == {"all-gather", "all-reduce", "all-to-all",
+                              "collective-permute", "reduce-scatter"}
+
+
+def test_real_hlo_psum():
+    """End-to-end on real compiled HLO (1-device mesh still emits the op
+    structure when contracted over a sharded axis on multi-dev meshes; here we
+    just assert the parser tolerates real output)."""
+    mesh = jax.make_mesh((1,), ("d",), axis_types=(AxisType.Auto,))
+    f = jax.jit(lambda x: x @ x.T,
+                in_shardings=NamedSharding(mesh, P(None, "d")))
+    comp = f.lower(jax.ShapeDtypeStruct((8, 8), jnp.float32)).compile()
+    s = collective_summary(comp.as_text())
+    assert s.count >= 0  # parser never crashes on real HLO

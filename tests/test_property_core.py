@@ -1,0 +1,96 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (bcd, bdcd, block_forward_substitution, ca_bcd,
+                        ca_bdcd, overlap_matrix, sample_blocks, solve_spd)
+
+from _x64 import x64_mode  # noqa: F401
+
+dims = st.integers(min_value=6, max_value=40)
+
+
+def _problem(seed, d, n):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    X = jax.random.normal(k1, (d, n), jnp.float64)
+    y = jax.random.normal(k2, (n,), jnp.float64)
+    return X, y
+
+
+@given(seed=st.integers(0, 2**16), d=dims, n=dims,
+       b=st.integers(1, 5), s=st.integers(1, 6),
+       lam=st.floats(1e-6, 10.0))
+def test_ca_bcd_equals_bcd(seed, d, n, b, s, lam):
+    """THE paper property: identical iterates for every (d, n, b, s, lam)."""
+    b = min(b, d)
+    X, y = _problem(seed, d, n)
+    iters = 2 * s
+    idx = sample_blocks(jax.random.key(seed + 1), d, b, iters)
+    r_cl = bcd(X, y, lam, b, iters, None, idx=idx)
+    r_ca = ca_bcd(X, y, lam, b, s, iters, None, idx=idx)
+    np.testing.assert_allclose(r_ca.w, r_cl.w, rtol=1e-9, atol=1e-11)
+
+
+@given(seed=st.integers(0, 2**16), d=dims, n=dims,
+       b=st.integers(1, 5), s=st.integers(1, 6),
+       lam=st.floats(1e-4, 10.0))
+def test_ca_bdcd_equals_bdcd(seed, d, n, b, s, lam):
+    b = min(b, n)
+    X, y = _problem(seed, d, n)
+    iters = 2 * s
+    idx = sample_blocks(jax.random.key(seed + 2), n, b, iters)
+    r_cl = bdcd(X, y, lam, b, iters, None, idx=idx)
+    r_ca = ca_bdcd(X, y, lam, b, s, iters, None, idx=idx)
+    np.testing.assert_allclose(r_ca.w, r_cl.w, rtol=1e-9, atol=1e-11)
+
+
+@given(seed=st.integers(0, 2**16), n_total=st.integers(4, 200),
+       b=st.integers(1, 4), iters=st.integers(1, 10))
+def test_sampling_without_replacement(seed, n_total, b, iters):
+    b = min(b, n_total)
+    idx = np.asarray(sample_blocks(jax.random.key(seed), n_total, b, iters))
+    assert idx.shape == (iters, b)
+    assert idx.min() >= 0 and idx.max() < n_total
+    for row in idx:
+        assert len(set(row.tolist())) == b  # no replacement within a block
+
+
+@given(seed=st.integers(0, 2**16), s=st.integers(1, 5), b=st.integers(1, 4))
+def test_block_forward_substitution_oracle(seed, s, b):
+    """The CA inner loop solves the block lower-triangular system exactly."""
+    sb = s * b
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    M = jax.random.normal(k1, (sb, sb), jnp.float64)
+    A = M @ M.T + sb * jnp.eye(sb, dtype=jnp.float64)  # SPD
+    base = jax.random.normal(k2, (sb,), jnp.float64)
+    x = block_forward_substitution(A, base, s, b)
+    # oracle: dense solve of the block-lower-triangular part of A
+    Ab = np.asarray(A).reshape(s, b, s, b)
+    L = np.zeros((sb, sb))
+    for i in range(s):
+        for j in range(i + 1):
+            L[i*b:(i+1)*b, j*b:(j+1)*b] = Ab[i, :, j, :]
+    expected = np.linalg.solve(L, np.asarray(base))
+    np.testing.assert_allclose(x, expected, rtol=1e-9, atol=1e-11)
+
+
+@given(seed=st.integers(0, 2**16), m=st.integers(2, 30))
+def test_overlap_matrix_properties(seed, m):
+    idx = jax.random.randint(jax.random.key(seed), (m,), 0, 10)
+    O = np.asarray(overlap_matrix(idx))
+    assert np.allclose(O, O.T)
+    assert np.all(np.diag(O) == 1.0)
+    assert set(np.unique(O)).issubset({0.0, 1.0})
+
+
+@given(seed=st.integers(0, 2**16), n=st.integers(2, 24))
+def test_solve_spd(seed, n):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    M = jax.random.normal(k1, (n, n), jnp.float64)
+    A = M @ M.T + n * jnp.eye(n, dtype=jnp.float64)
+    rhs = jax.random.normal(k2, (n,), jnp.float64)
+    x = solve_spd(A, rhs)
+    np.testing.assert_allclose(A @ x, rhs, rtol=1e-9, atol=1e-9)
