@@ -1,0 +1,12 @@
+.PHONY: test test-fast bench
+
+# Tier-1 verify (ROADMAP.md): the full suite, fail-fast.
+test:
+	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m pytest -x -q
+
+# Skip the slow multi-device integration checks (marker registered in pytest.ini).
+test-fast:
+	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m pytest -x -q -m "not slow"
+
+bench:
+	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m benchmarks.run

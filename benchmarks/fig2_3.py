@@ -23,7 +23,7 @@ TARGET = 1e-2
 P = 256
 
 
-def run() -> list[str]:
+def run(impl: str | None = None) -> list[str]:
     jax.config.update("jax_enable_x64", True)
     rows = []
     for name, spec in PAPER_DATASETS.items():
@@ -36,7 +36,7 @@ def run() -> list[str]:
         for b in SWEEP[name]:
             b_eff = min(b, d)
             res = bcd(X, y, lam, b_eff, H[name], jax.random.key(4),
-                      w_ref=w_opt)
+                      w_ref=w_opt, impl=impl)
             rel = (np.asarray(res.history["objective"]) - f_opt) / abs(f_opt)
             it = iters_to_accuracy(rel, TARGET)
             sol = float(res.history["sol_err"][-1])

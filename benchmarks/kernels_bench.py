@@ -11,7 +11,8 @@ from repro.kernels.gram import gram_packet
 from ._util import row, timed
 
 
-def run() -> list[str]:
+def run(impl: str | None = None) -> list[str]:
+    impl = impl or "ref"
     rows = []
     n = 1 << 15
     b, s = 8, 16
@@ -23,12 +24,12 @@ def run() -> list[str]:
 
     @jax.jit
     def classical(blocks, u):
-        return [gram_packet(Ab, u, scale=1.0 / n, impl="ref")
+        return [gram_packet(Ab, u, scale=1.0 / n, impl=impl)
                 for Ab in blocks]
 
     @jax.jit
     def ca(Abig, u):
-        return gram_packet(Abig, u, scale=1.0 / n, impl="ref")
+        return gram_packet(Abig, u, scale=1.0 / n, impl=impl)
 
     us_cl = timed(classical, A_small, u)
     us_ca = timed(ca, A_big, u)

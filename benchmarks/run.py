@@ -15,8 +15,13 @@ MODULES = ["table1", "table2", "fig2_3", "fig4", "fig5_6", "fig7", "fig8_9",
 
 
 def main() -> None:
+    import inspect
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--impl", default=None,
+                    help="Gram-packet backend forwarded to benches that take "
+                         "it: ref | pallas | pallas_interpret")
     args = ap.parse_args()
     mods = [args.only] if args.only else MODULES
     print("name,us_per_call,derived")
@@ -25,7 +30,9 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            for line in mod.run():
+            kw = ({"impl": args.impl}
+                  if "impl" in inspect.signature(mod.run).parameters else {})
+            for line in mod.run(**kw):
                 print(line, flush=True)
             print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
         except Exception:

@@ -22,17 +22,18 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
 from repro.core import ca_bcd_sharded, ca_bdcd_sharded, count_in_compiled, make_solver_mesh
 from repro.core.distributed import lower_solver
+impl = os.environ.get("REPRO_GRAM_IMPL") or None
 mesh = make_solver_mesh(8)
 iters = 16
 for s in (1, 2, 4, 8):
     comp = lower_solver(ca_bcd_sharded, mesh, 64, 256, 1e-3, 8, s, iters,
-                        fuse_packet=(s > 1), unroll=iters // s)
+                        fuse_packet=(s > 1), unroll=iters // s, impl=impl)
     c = count_in_compiled(comp)
     print(f"BCD s={s} count={c.count} operand={c.operand_bytes:.0f}")
 """
 
 
-def run() -> list[str]:
+def run(impl: str | None = None) -> list[str]:
     rows = []
     d, n, P, b, H = 1024, 2 ** 20, 256, 4, 1024
     base = bcd_costs(d, n, P, b, H, 1)
@@ -53,6 +54,8 @@ def run() -> list[str]:
     env = dict(os.environ)
     src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
     env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get("PYTHONPATH", "")
+    if impl:
+        env["REPRO_GRAM_IMPL"] = impl
     proc = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
                           capture_output=True, text=True, timeout=1200)
     if proc.returncode == 0:

@@ -26,6 +26,7 @@ def child():
     from repro.core.distributed import lower_solver
     from repro.data import SyntheticSpec, make_regression
 
+    impl = os.environ.get("REPRO_GRAM_IMPL") or None
     print(f"devices: {len(jax.devices())}")
     mesh = make_solver_mesh(8)
     X, y, _ = make_regression(jax.random.key(0),
@@ -33,21 +34,23 @@ def child():
     lam, b, s, iters = 1e-3, 8, 8, 64
 
     idx = sample_blocks(jax.random.key(1), 128, b, iters)
-    w_dist, _ = ca_bcd_sharded(mesh, X, y, lam, b, s, iters, None, idx=idx)
-    w_ref = ca_bcd(X, y, lam, b, s, iters, None, idx=idx).w
+    w_dist, _ = ca_bcd_sharded(mesh, X, y, lam, b, s, iters, None, idx=idx,
+                               impl=impl)
+    w_ref = ca_bcd(X, y, lam, b, s, iters, None, idx=idx, impl=impl).w
     print(f"CA-BCD  1D-col: |w_dist - w_single| = "
           f"{float(np.max(np.abs(w_dist - w_ref))):.2e}")
 
     idx2 = sample_blocks(jax.random.key(2), 4096, 16, iters)
-    w2, _ = ca_bdcd_sharded(mesh, X, y, lam, 16, s, iters, None, idx=idx2)
-    w2_ref = ca_bdcd(X, y, lam, 16, s, iters, None, idx=idx2).w
+    w2, _ = ca_bdcd_sharded(mesh, X, y, lam, 16, s, iters, None, idx=idx2,
+                            impl=impl)
+    w2_ref = ca_bdcd(X, y, lam, 16, s, iters, None, idx=idx2, impl=impl).w
     print(f"CA-BDCD 1D-row: |w_dist - w_single| = "
           f"{float(np.max(np.abs(w2 - w2_ref))):.2e}")
 
     cl = lower_solver(ca_bcd_sharded, mesh, 128, 4096, lam, b, 1, iters,
-                      fuse_packet=False, unroll=iters)
+                      fuse_packet=True, unroll=iters, impl=impl)
     ca = lower_solver(ca_bcd_sharded, mesh, 128, 4096, lam, b, s, iters,
-                      fuse_packet=True, unroll=iters // s)
+                      fuse_packet=True, unroll=iters // s, impl=impl)
     n_cl, n_ca = count_in_compiled(cl).count, count_in_compiled(ca).count
     print(f"collectives per {iters} iterations: classical={n_cl}, "
           f"CA(s={s})={n_ca}  -> latency / {n_cl // n_ca}")
@@ -57,9 +60,16 @@ def main():
     if os.environ.get(PAYLOAD):
         child()
         return
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--impl", default=None,
+                    help="Gram-packet backend: ref | pallas | pallas_interpret")
+    args = ap.parse_args()
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env[PAYLOAD] = "1"
+    if args.impl:
+        env["REPRO_GRAM_IMPL"] = args.impl
     env.setdefault("PYTHONPATH", "src")
     sys.exit(subprocess.run([sys.executable, os.path.abspath(__file__)],
                             env=env).returncode)

@@ -4,8 +4,10 @@ Solves a ridge problem with classical BCD and CA-BCD(s), showing
   1. identical convergence trajectories (the exact-arithmetic claim), and
   2. s-fold fewer synchronization points (the latency claim).
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [--impl ref|pallas|pallas_interpret]
 """
+import argparse
+
 import jax
 
 jax.config.update("jax_enable_x64", True)
@@ -17,7 +19,7 @@ from repro.core import bcd, ca_bcd, ridge_exact, sample_blocks  # noqa: E402
 from repro.data import SyntheticSpec, make_regression  # noqa: E402
 
 
-def main():
+def main(impl: str | None = None):
     # A news20-shaped problem: more features than data points, ill-conditioned.
     X, y, _ = make_regression(jax.random.key(0),
                               SyntheticSpec("demo", d=512, n=2048, cond=1e6))
@@ -28,9 +30,9 @@ def main():
     iters, b, s = 1000, 8, 25
     idx = sample_blocks(jax.random.key(1), X.shape[0], b, iters)
 
-    res_bcd = bcd(X, y, lam, b, iters, None, idx=idx, w_ref=w_opt)
+    res_bcd = bcd(X, y, lam, b, iters, None, idx=idx, w_ref=w_opt, impl=impl)
     res_ca = ca_bcd(X, y, lam, b, s, iters, None, idx=idx, w_ref=w_opt,
-                    track_cond=True)
+                    track_cond=True, impl=impl)
 
     dev = np.max(np.abs(np.asarray(res_ca.history["objective"]) -
                         np.asarray(res_bcd.history["objective"])))
@@ -50,4 +52,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--impl", default=None,
+                    help="Gram-packet backend: ref | pallas | pallas_interpret")
+    main(ap.parse_args().impl)

@@ -1,0 +1,6 @@
+#!/usr/bin/env sh
+# Tier-1 suite in one line: PYTHONPATH=src + pytest from the repo root.
+# Extra args pass through, e.g. scripts/test.sh -k gram_dispatch
+set -e
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

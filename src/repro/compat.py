@@ -1,0 +1,69 @@
+"""JAX version-compatibility shims.
+
+The codebase targets the post-0.4.37 API surface (``jax.shard_map`` at top
+level, explicit ``jax.sharding.AxisType`` on meshes, ``jax.lax.pvary`` for
+varying-manual-axes bookkeeping).  The installed JAX may be 0.4.37, where none
+of those exist: ``shard_map`` lives in ``jax.experimental.shard_map``, meshes
+have no axis types, and replication tracking needs no pvary marks.
+
+Everything mesh/shard_map-shaped in this repo goes through this module so the
+same source runs on both API generations.  Keep the shims minimal and
+feature-probed (``hasattr``), never version-string-parsed.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+HAS_AXIS_TYPES = _AXIS_TYPE is not None
+
+
+def _axis_types_kwargs(n_axes: int) -> dict[str, Any]:
+    """``{'axis_types': (Auto,) * n}`` on JAX versions with explicit axis
+    types (where shard_map requires Auto axes), ``{}`` on older ones."""
+    if not HAS_AXIS_TYPES:
+        return {}
+    return {"axis_types": (_AXIS_TYPE.Auto,) * n_axes}
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str], *,
+              devices=None) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    kw: dict[str, Any] = _axis_types_kwargs(len(tuple(shape)))
+    if devices is not None:
+        kw["devices"] = devices
+    return jax.make_mesh(tuple(shape), tuple(axes), **kw)
+
+
+def device_mesh(devices, axes: Sequence[str]) -> jax.sharding.Mesh:
+    """``jax.sharding.Mesh`` from an explicit device ndarray (tests build
+    shrunken / repeated-device meshes this way), axis types guarded."""
+    axes = tuple(axes)
+    return jax.sharding.Mesh(devices, axes, **_axis_types_kwargs(len(axes)))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Top-level ``jax.shard_map`` when present, else the 0.4.x
+    ``jax.experimental.shard_map`` (with replication checking off: the old
+    checker cannot follow the solver scan carries that newer JAX handles via
+    pvary, and the shims below make pvary a no-op there)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def pvary(x, axis):
+    """Mark a locally-created array as device-varying over ``axis`` -- vma
+    bookkeeping for scan carries inside shard_map.  Old JAX (no pvary/pcast)
+    does not track varying manual axes, so the mark is a no-op there."""
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axes)
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, axes, to="varying")  # transitional spelling
+    return x

@@ -9,6 +9,7 @@ from .distributed import (bcd_sharded, bdcd_sharded, ca_bcd_sharded,
                           ca_bdcd_sharded, lower_solver, make_solver_mesh)
 from .hlo_analysis import (CollectiveSummary, collective_summary,
                            count_in_compiled, parse_collectives)
+from repro.kernels.gram import gram, gram_packet
 from .krylov import cg_ridge, cg_ridge_history
 from .sampling import overlap_matrix, sample_blocks, sample_blocks_balanced
 from .subproblem import block_forward_substitution, solve_spd
@@ -20,6 +21,7 @@ __all__ = [
     "ridge_exact", "cg_ridge", "cg_ridge_history", "tsqr", "tsqr_ridge",
     "bcd_sharded", "bdcd_sharded", "ca_bcd_sharded", "ca_bdcd_sharded",
     "lower_solver", "make_solver_mesh",
+    "gram", "gram_packet",
     "sample_blocks", "sample_blocks_balanced", "overlap_matrix",
     "block_forward_substitution", "solve_spd",
     "CollectiveSummary", "collective_summary", "count_in_compiled",

@@ -24,6 +24,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.gram import gram_packet
+
 from .sampling import overlap_matrix, sample_blocks
 from .subproblem import block_forward_substitution, solve_spd
 
@@ -58,10 +60,12 @@ def _metrics(alpha, w, y, lam, w_ref):
 
 def bcd(X: jax.Array, y: jax.Array, lam: float, b: int, iters: int,
         key: jax.Array, *, w0: jax.Array | None = None,
-        idx: jax.Array | None = None, w_ref: jax.Array | None = None) -> SolveResult:
+        idx: jax.Array | None = None, w_ref: jax.Array | None = None,
+        impl: str | None = None) -> SolveResult:
     """Classical BCD, Algorithm 1 (residual form).  One Gram + one subproblem
     per iteration; in the distributed setting this is one synchronization per
-    iteration, which is what the CA variant removes."""
+    iteration, which is what the CA variant removes.  ``impl`` selects the
+    Gram-packet backend (``repro.core.gram_packet``)."""
     d, n = X.shape
     if idx is None:
         idx = sample_blocks(key, d, b, iters)
@@ -71,8 +75,11 @@ def bcd(X: jax.Array, y: jax.Array, lam: float, b: int, iters: int,
     def step(carry, idx_h):
         w, alpha = carry
         Xb = X[idx_h, :]                                   # (b, n) sampled rows
-        Gamma = Xb @ Xb.T / n + lam * jnp.eye(b, dtype=X.dtype)
-        r = -lam * w[idx_h] - Xb @ alpha / n + Xb @ y / n  # Eq. (7) rhs
+        # One fused packet: Gamma = Xb Xb^T / n + lam I and the residual
+        # contribution Xb (y - alpha) / n of the Eq. (7) rhs.
+        Gamma, r_x = gram_packet(Xb, y - alpha, scale=1.0 / n, reg=lam,
+                                 impl=impl)
+        r = r_x - lam * w[idx_h]                           # Eq. (7) rhs
         dw = solve_spd(Gamma, r)
         w = w.at[idx_h].add(dw)
         alpha = alpha + Xb.T @ dw                          # Eq. (5)
@@ -85,14 +92,15 @@ def bcd(X: jax.Array, y: jax.Array, lam: float, b: int, iters: int,
 def ca_bcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int, iters: int,
            key: jax.Array, *, w0: jax.Array | None = None,
            idx: jax.Array | None = None, w_ref: jax.Array | None = None,
-           track_cond: bool = False) -> SolveResult:
+           track_cond: bool = False, impl: str | None = None) -> SolveResult:
     """CA-BCD, Algorithm 2.  ``iters`` counts *inner* iterations; must be a
     multiple of ``s``.  Consumes the same index stream as :func:`bcd` (same
     ``key`` => identical iterates in exact arithmetic).
 
-    Per outer iteration: ONE sb x sb Gram (the only communication in the
-    distributed version), then ``s`` local solves via block forward
-    substitution, then deferred vector updates (Eqs. 9-10).
+    Per outer iteration: ONE sb x sb Gram packet (the only communication in
+    the distributed version; computed by the ``impl``-selected backend with
+    the lam-regularized diagonal fused in), then ``s`` local solves via block
+    forward substitution, then deferred vector updates (Eqs. 9-10).
     """
     d, n = X.shape
     if iters % s != 0:
@@ -108,10 +116,15 @@ def ca_bcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int, iters: int,
         w, alpha = carry
         flat = idx_k.reshape(sb)
         Y = X[flat, :]                                     # (sb, n)
-        gram = Y @ Y.T / n                                 # one all-reduce, distributed
+        # One fused packet: gram = Y Y^T / n + lam I (regularized diagonal
+        # inside the kernel) and r = Y (y - alpha) / n, one all-reduce in the
+        # distributed version.
+        gram, r = gram_packet(Y, y - alpha, scale=1.0 / n, reg=lam, impl=impl)
         O = overlap_matrix(flat).astype(X.dtype)           # local: shared-seed trick
-        A = gram + lam * O
-        base = -lam * w[flat] + Y @ (y - alpha) / n        # Eq. (8) non-correction terms
+        # lam I is already on gram's diagonal; add only the off-diagonal
+        # duplicate-index overlap terms (O's diagonal is exactly 1).
+        A = gram + lam * (O - jnp.eye(sb, dtype=X.dtype))
+        base = r - lam * w[flat]                           # Eq. (8) non-correction terms
         dws = block_forward_substitution(A, base, s, b)
 
         # Per-inner-iteration metrics, reconstructed locally (test/bench only;
@@ -127,8 +140,8 @@ def ca_bcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int, iters: int,
 
         (w, alpha), hist = jax.lax.scan(inner, (w, alpha), jnp.arange(s))
         if track_cond:
-            hist["gram_cond"] = jnp.full((s,), jnp.linalg.cond(
-                gram + lam * jnp.eye(sb, dtype=X.dtype)))
+            # gram already carries the lam-regularized diagonal (packet reg).
+            hist["gram_cond"] = jnp.full((s,), jnp.linalg.cond(gram))
         return (w, alpha), hist
 
     (w, alpha), hist = jax.lax.scan(outer, (w, alpha), idx)

@@ -19,6 +19,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.gram import gram_packet
+
 from .bcd import SolveResult, _metrics
 from .sampling import overlap_matrix, sample_blocks
 from .subproblem import block_forward_substitution, solve_spd
@@ -26,8 +28,10 @@ from .subproblem import block_forward_substitution, solve_spd
 
 def bdcd(X: jax.Array, y: jax.Array, lam: float, b: int, iters: int,
          key: jax.Array, *, alpha0: jax.Array | None = None,
-         idx: jax.Array | None = None, w_ref: jax.Array | None = None) -> SolveResult:
-    """Classical BDCD, Algorithm 3.  ``b`` is the paper's b'."""
+         idx: jax.Array | None = None, w_ref: jax.Array | None = None,
+         impl: str | None = None) -> SolveResult:
+    """Classical BDCD, Algorithm 3.  ``b`` is the paper's b'.  ``impl``
+    selects the Gram-packet backend (``repro.core.gram_packet``)."""
     d, n = X.shape
     if idx is None:
         idx = sample_blocks(key, n, b, iters)
@@ -37,8 +41,11 @@ def bdcd(X: jax.Array, y: jax.Array, lam: float, b: int, iters: int,
     def step(carry, idx_h):
         w, alpha = carry
         Xc = X[:, idx_h]                                   # (d, b) sampled columns
-        Theta = Xc.T @ Xc / (lam * n * n) + jnp.eye(b, dtype=X.dtype) / n
-        rhs = (Xc.T @ w - alpha[idx_h] - y[idx_h]) / n     # Eq. (17)
+        # One fused packet: Theta = Xc^T Xc / (lam n^2) + I/n (regularized
+        # diagonal fused) and the raw projection Xc^T w (scale_r=1).
+        Theta, u = gram_packet(Xc.T, w, scale=1.0 / (lam * n * n),
+                               scale_r=1.0, reg=1.0 / n, impl=impl)
+        rhs = (u - alpha[idx_h] - y[idx_h]) / n            # Eq. (17)
         da = solve_spd(Theta, rhs)
         alpha = alpha.at[idx_h].add(da)
         w = w - Xc @ da / (lam * n)                        # Eq. (15)
@@ -65,10 +72,10 @@ def _metrics_dual(X, alpha, w, y, lam, w_ref):
 def ca_bdcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int, iters: int,
             key: jax.Array, *, alpha0: jax.Array | None = None,
             idx: jax.Array | None = None, w_ref: jax.Array | None = None,
-            track_cond: bool = False) -> SolveResult:
+            track_cond: bool = False, impl: str | None = None) -> SolveResult:
     """CA-BDCD, Algorithm 4.  Same index stream as :func:`bdcd` => identical
-    iterates in exact arithmetic; one sb' x sb' Gram all-reduce per outer
-    iteration in the distributed version."""
+    iterates in exact arithmetic; one sb' x sb' Gram-packet all-reduce per
+    outer iteration in the distributed version (backend per ``impl``)."""
     d, n = X.shape
     if iters % s != 0:
         raise ValueError(f"iters={iters} must be a multiple of s={s}")
@@ -83,10 +90,15 @@ def ca_bdcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int, iters: int,
         w, alpha = carry
         flat = idx_k.reshape(sb)
         Y = X[:, flat]                                     # (d, sb)
-        gram = Y.T @ Y / (lam * n * n)                     # one all-reduce, distributed
+        # One fused packet: gram = Y^T Y / (lam n^2) + I/n and the raw
+        # projection Y^T w; one all-reduce in the distributed version.
+        gram, u = gram_packet(Y.T, w, scale=1.0 / (lam * n * n),
+                              scale_r=1.0, reg=1.0 / n, impl=impl)
         O = overlap_matrix(flat).astype(X.dtype)
-        A = gram + O / n
-        base = (Y.T @ w - alpha[flat] - y[flat]) / n       # Eq. (18) non-correction terms
+        # I/n is already on gram's diagonal; add only the off-diagonal
+        # duplicate-index overlap terms (O's diagonal is exactly 1).
+        A = gram + (O - jnp.eye(sb, dtype=X.dtype)) / n
+        base = (u - alpha[flat] - y[flat]) / n             # Eq. (18) non-correction terms
         das = block_forward_substitution(A, base, s, b)
 
         def inner(c, j):
@@ -100,8 +112,8 @@ def ca_bdcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int, iters: int,
 
         (w, alpha), hist = jax.lax.scan(inner, (w, alpha), jnp.arange(s))
         if track_cond:
-            hist["gram_cond"] = jnp.full((s,), jnp.linalg.cond(
-                gram + jnp.eye(sb, dtype=X.dtype) / n))
+            # gram already carries the I/n-regularized diagonal (packet reg).
+            hist["gram_cond"] = jnp.full((s,), jnp.linalg.cond(gram))
         return (w, alpha), hist
 
     (w, alpha), hist = jax.lax.scan(outer, (w, alpha), idx)

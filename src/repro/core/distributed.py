@@ -24,6 +24,12 @@ faithful baseline measured in EXPERIMENTS.md section Perf.
 All devices compute identical block indices from the replicated key (the
 paper's shared-seed trick), so the overlap terms and the inner block forward
 substitution are local and replicated.
+
+The local (G, r) contributions are built by the Gram-backend dispatch layer
+(``repro.kernels.gram.gram_packet``, re-exported as ``repro.core.gram_packet``)
+-- jnp reference on CPU, the Pallas kernel on TPU -- selected per solver via
+``impl=``; mesh construction and shard_map go through ``repro.compat`` so the
+same code runs on JAX 0.4.37 and newer API generations.
 """
 from __future__ import annotations
 
@@ -34,6 +40,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
+from repro.kernels.gram import gram_packet
+
 from .sampling import overlap_matrix, sample_blocks
 from .subproblem import block_forward_substitution, solve_spd
 
@@ -41,8 +50,7 @@ from .subproblem import block_forward_substitution, solve_spd
 def make_solver_mesh(n_devices: int | None = None, name: str = "shards") -> Mesh:
     devs = jax.devices()
     n = n_devices or len(devs)
-    return jax.make_mesh((n,), (name,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((n,), (name,))
 
 
 def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
@@ -64,10 +72,8 @@ def _axes(axis) -> tuple:
 
 def _pvary(x, axis):
     """Mark a locally-created array as device-varying over ``axis`` (scan-carry
-    vma bookkeeping inside shard_map)."""
-    if hasattr(jax.lax, "pvary"):
-        return jax.lax.pvary(x, _axes(axis))
-    return jax.lax.pcast(x, _axes(axis), to="varying")  # newer spelling
+    vma bookkeeping inside shard_map; no-op on pre-vma JAX)."""
+    return compat.pvary(x, _axes(axis))
 
 
 def _psum_packet(G_local, r_local, axis, fuse):
@@ -86,10 +92,12 @@ def _psum_packet(G_local, r_local, axis, fuse):
 def ca_bcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
                    s: int, iters: int, key: jax.Array, *,
                    axis: str = "shards", fuse_packet: bool = True,
-                   idx: jax.Array | None = None, unroll: int = 1):
+                   idx: jax.Array | None = None, unroll: int = 1,
+                   impl: str | None = None):
     """CA-BCD with X (d, n) sharded over columns.  s=1 gives the classical
     schedule (one Gram reduction per iteration).  Returns (w replicated,
-    alpha sharded over n)."""
+    alpha sharded over n).  ``impl`` selects the Gram-packet backend for the
+    local (G, r) contributions (see ``repro.kernels.gram``)."""
     d, n = X.shape
     if iters % s:
         raise ValueError(f"iters={iters} must be a multiple of s={s}")
@@ -112,8 +120,9 @@ def ca_bcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
             w, al = carry
             flat = idx_k.reshape(sb)
             Yl = Xl[flat, :]                       # (sb, n/P) sampled rows, local panel
-            Gl = Yl @ Yl.T / n                     # local Gram contribution
-            rl = Yl @ (yl - al) / n                # local residual contribution
+            # Local (Gram, residual) contribution via the kernel dispatch layer;
+            # reg stays 0 here -- the regularizer is added once, after the psum.
+            Gl, rl = gram_packet(Yl, yl - al, scale=1.0 / n, reg=0.0, impl=impl)
             G, r = _psum_packet(Gl, rl, axis, fuse_packet)   # THE sync point
             A = G + lam * overlap_matrix(flat).astype(dtype)
             base = r - lam * w[flat]
@@ -125,21 +134,22 @@ def ca_bcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
         (w, al), _ = jax.lax.scan(outer, (w, al), idx_rep, unroll=unroll)
         return w, al
 
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=(P(None, axis), P(axis), P(None)),
-                       out_specs=(P(None), P(axis)))
+    fn = compat.shard_map(body, mesh=mesh,
+                          in_specs=(P(None, axis), P(axis), P(None)),
+                          out_specs=(P(None), P(axis)))
     w, alpha = fn(X, y, idx)
     return w, alpha[:n]
 
 
 def bcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
                 iters: int, key: jax.Array, *, axis: str = "shards",
-                fuse_packet: bool = False, idx: jax.Array | None = None):
+                fuse_packet: bool = False, idx: jax.Array | None = None,
+                impl: str | None = None):
     """Classical distributed BCD (Theorem 1 schedule): per-iteration reductions.
     Implemented as CA with s=1; ``fuse_packet=False`` keeps the paper's separate
     Gram and residual reductions."""
     return ca_bcd_sharded(mesh, X, y, lam, b, 1, iters, key, axis=axis,
-                          fuse_packet=fuse_packet, idx=idx)
+                          fuse_packet=fuse_packet, idx=idx, impl=impl)
 
 
 # --------------------------------------------------------------------------
@@ -149,9 +159,10 @@ def bcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
 def ca_bdcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
                     s: int, iters: int, key: jax.Array, *,
                     axis: str = "shards", fuse_packet: bool = True,
-                    idx: jax.Array | None = None, unroll: int = 1):
+                    idx: jax.Array | None = None, unroll: int = 1,
+                    impl: str | None = None):
     """CA-BDCD with X (d, n) sharded over rows.  Returns (w sharded over d,
-    alpha replicated)."""
+    alpha replicated).  ``impl`` selects the Gram-packet backend."""
     d, n = X.shape
     if iters % s:
         raise ValueError(f"iters={iters} must be a multiple of s={s}")
@@ -171,8 +182,10 @@ def ca_bdcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
             wl, alpha = carry
             flat = idx_k.reshape(sb)
             Yl = Xl[:, flat]                       # (d/P, sb) sampled columns
-            Gl = Yl.T @ Yl / (lam * n * n)
-            ul = Yl.T @ wl                         # local contribution to Y^T w
+            # One packet: Gl = Yl^T Yl / (lam n^2) plus the *unscaled* local
+            # contribution to Y^T w (scale_r=1); reg added after the psum.
+            Gl, ul = gram_packet(Yl.T, wl, scale=1.0 / (lam * n * n),
+                                 scale_r=1.0, reg=0.0, impl=impl)
             G, u = _psum_packet(Gl, ul, axis, fuse_packet)   # THE sync point
             A = G + overlap_matrix(flat).astype(dtype) / n
             base = (u - alpha[flat] - y_rep[flat]) / n
@@ -184,19 +197,20 @@ def ca_bdcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
         (wl, alpha), _ = jax.lax.scan(outer, (wl, alpha), idx_rep, unroll=unroll)
         return wl, alpha
 
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=(P(axis, None), P(None), P(None)),
-                       out_specs=(P(axis), P(None)))
+    fn = compat.shard_map(body, mesh=mesh,
+                          in_specs=(P(axis, None), P(None), P(None)),
+                          out_specs=(P(axis), P(None)))
     wl, alpha = fn(X, y, idx)
     return wl[:d], alpha
 
 
 def bdcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
                  iters: int, key: jax.Array, *, axis: str = "shards",
-                 fuse_packet: bool = False, idx: jax.Array | None = None):
+                 fuse_packet: bool = False, idx: jax.Array | None = None,
+                 impl: str | None = None):
     """Classical distributed BDCD (Theorem 2 schedule)."""
     return ca_bdcd_sharded(mesh, X, y, lam, b, 1, iters, key, axis=axis,
-                           fuse_packet=fuse_packet, idx=idx)
+                           fuse_packet=fuse_packet, idx=idx, impl=impl)
 
 
 # --------------------------------------------------------------------------
@@ -205,9 +219,11 @@ def bdcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
 
 def lower_solver(solver, mesh: Mesh, d: int, n: int, lam: float, b: int, s: int,
                  iters: int, *, axis: str = "shards", fuse_packet: bool = True,
-                 dtype=jnp.float32, col_sharded: bool = True, unroll: int = 1):
+                 dtype=jnp.float32, col_sharded: bool = True, unroll: int = 1,
+                 impl: str | None = None):
     """Lower+compile a solver on abstract operands; returns the Compiled object
-    (for HLO collective counting and roofline terms)."""
+    (for HLO collective counting and roofline terms).  ``impl`` is forwarded to
+    the solver's Gram-packet dispatch."""
     from jax.sharding import NamedSharding
     xspec = P(None, axis) if col_sharded else P(axis, None)
     yspec = P(axis) if col_sharded else P(None)
@@ -219,6 +235,6 @@ def lower_solver(solver, mesh: Mesh, d: int, n: int, lam: float, b: int, s: int,
     def run(Xv, yv, keyv):
         return solver(mesh, Xv, yv, lam, b, s, iters,
                       jax.random.wrap_key_data(keyv), axis=axis,
-                      fuse_packet=fuse_packet, unroll=unroll)
+                      fuse_packet=fuse_packet, unroll=unroll, impl=impl)
 
     return jax.jit(run).lower(X, y, key).compile()

@@ -36,8 +36,10 @@ DEFAULT_BK = 512   # contraction tile
 
 
 def _gram_packet_kernel(a_i_ref, a_j_ref, u_ref, g_ref, r_ref, *,
-                        scale: float, reg: float, n_k: int, symmetric_skip: bool):
+                        scale: float, reg: float, scale_r: float, n_k: int,
+                        symmetric_skip: bool):
     i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    acc = g_ref.dtype
 
     @pl.when(k == 0)
     def _init():
@@ -55,7 +57,7 @@ def _gram_packet_kernel(a_i_ref, a_j_ref, u_ref, g_ref, r_ref, *,
         a_j = a_j_ref[...]
         g_ref[...] += scale * jax.lax.dot_general(
             a_i, a_j, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)
+            preferred_element_type=acc)
 
     # Residual panel: each row block i accumulates A_i @ u once per k tile;
     # attach it to the j == 0 cells so it is computed exactly once.
@@ -63,9 +65,9 @@ def _gram_packet_kernel(a_i_ref, a_j_ref, u_ref, g_ref, r_ref, *,
     def _residual():
         a_i = a_i_ref[...]
         u = u_ref[...]
-        r_ref[...] += scale * jax.lax.dot_general(
+        r_ref[...] += scale_r * jax.lax.dot_general(
             a_i, u[:, None], (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)[:, 0]
+            preferred_element_type=acc)[:, 0]
 
     # Regularizer on the true diagonal, once, on the last k step.
     @pl.when(jnp.logical_and(k == n_k - 1, i == j))
@@ -73,27 +75,34 @@ def _gram_packet_kernel(a_i_ref, a_j_ref, u_ref, g_ref, r_ref, *,
         bm = g_ref.shape[0]
         rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 0)
         cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 1)
-        g_ref[...] += jnp.where(rows == cols, jnp.float32(reg), 0.0)
+        g_ref[...] += jnp.where(rows == cols, jnp.asarray(reg, acc),
+                                jnp.asarray(0.0, acc))
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "reg", "bm", "bk",
-                                             "symmetric_skip", "interpret"))
+@functools.partial(jax.jit, static_argnames=("scale", "reg", "scale_r", "bm",
+                                             "bk", "symmetric_skip",
+                                             "interpret"))
 def gram_packet_pallas(A: jax.Array, u: jax.Array, *, scale: float = 1.0,
-                       reg: float = 0.0, bm: int = DEFAULT_BM,
-                       bk: int = DEFAULT_BK, symmetric_skip: bool = True,
+                       reg: float = 0.0, scale_r: float | None = None,
+                       bm: int = DEFAULT_BM, bk: int = DEFAULT_BK,
+                       symmetric_skip: bool = True,
                        interpret: bool = False) -> tuple[jax.Array, jax.Array]:
-    """(G, r) = (scale*A@A^T + reg*I, scale*A@u) for A (m, n), u (n,).
+    """(G, r) = (scale*A@A^T + reg*I, scale_r*A@u) for A (m, n), u (n,).
 
-    Requires m % bm == 0 and n % bk == 0 (ops.py pads).  f32 outputs.
+    Requires m % bm == 0 and n % bk == 0 (ops.py pads).  Accumulates and
+    returns f32, or f64 when the input is f64 (the x64 solver-exactness path
+    runs this kernel in interpret mode on CPU).
     """
     m, n = A.shape
     if m % bm or n % bk:
         raise ValueError(f"A shape {A.shape} not tiled by bm={bm}, bk={bk}")
     n_k = n // bk
     grid = (m // bm, m // bm, n_k)
+    acc = jnp.float64 if A.dtype == jnp.float64 else jnp.float32
 
     kernel = functools.partial(
-        _gram_packet_kernel, scale=scale, reg=reg, n_k=n_k,
+        _gram_packet_kernel, scale=scale, reg=reg,
+        scale_r=(scale if scale_r is None else scale_r), n_k=n_k,
         symmetric_skip=symmetric_skip)
 
     g, r = pl.pallas_call(
@@ -109,8 +118,8 @@ def gram_packet_pallas(A: jax.Array, u: jax.Array, *, scale: float = 1.0,
             pl.BlockSpec((bm,), lambda i, j, k: (i,)),        # r tile
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((m, m), jnp.float32),
-            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m, m), acc),
+            jax.ShapeDtypeStruct((m,), acc),
         ],
         interpret=interpret,
     )(A, A, u)  # A appears twice: once as the row panel, once as the column panel

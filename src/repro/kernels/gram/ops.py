@@ -1,10 +1,14 @@
 """Public ops for the Gram packet: pad-to-tile, backend dispatch, unpad.
 
-``gram_packet(A, u)`` is the entry point the solvers call.  On TPU it runs the
-Pallas kernel; everywhere else (this CPU container, and inside the dry-run
-lowering) it uses the jnp reference, which XLA fuses well.  ``impl`` can force
-either path; tests force ``impl="pallas_interpret"`` to execute the kernel
-body in Python on CPU.
+``gram_packet(A, u)`` is the Gram-backend dispatch layer: every Gram + residual
+pair in the solvers goes through it -- the ``Y @ Y.T`` / ``Xb @ Xb.T`` products
+in ``repro.core.bcd`` / ``repro.core.bdcd`` and the local (Gl, rl)
+contributions inside ``shard_map`` in ``repro.core.distributed`` (re-exported
+as ``repro.core.gram_packet``).  On TPU it runs the Pallas kernel; everywhere
+else (this CPU container, and inside the dry-run lowering) it uses the jnp
+reference, which XLA fuses well.  ``impl`` can force either path; tests force
+``impl="pallas_interpret"`` to execute the kernel body on CPU and assert
+solver-level equivalence against ``impl="ref"``.
 """
 from __future__ import annotations
 
@@ -31,17 +35,26 @@ def _auto_impl() -> str:
 
 
 def gram_packet(A: jax.Array, u: jax.Array, *, scale: float = 1.0,
-                reg: float = 0.0, impl: str | None = None,
+                reg: float = 0.0, scale_r: float | None = None,
+                impl: str | None = None,
                 bm: int = DEFAULT_BM, bk: int = DEFAULT_BK,
                 symmetric_skip: bool = True) -> tuple[jax.Array, jax.Array]:
-    """Fused (G, r) = (scale*A@A^T + reg*I, scale*A@u); A (m, n), u (n,).
+    """Fused (G, r) = (scale*A@A^T + reg*I, scale_r*A@u); A (m, n), u (n,).
+
+    ``scale_r`` defaults to ``scale``.  ``impl`` is one of ``"ref"`` (jnp,
+    XLA-fused), ``"pallas"`` (TPU kernel), ``"pallas_interpret"`` (kernel body
+    executed on CPU, the test path); ``None`` auto-selects per backend.
 
     Zero padding is exact: padded k-columns contribute 0 to both products and
     padded m-rows are sliced off (their diagonal reg never leaves the pad).
     """
     impl = impl or _auto_impl()
     if impl == "ref":
-        return ref.gram_packet_ref(A, u, scale, reg)
+        return ref.gram_packet_ref(A, u, scale, reg, scale_r)
+    if impl not in ("pallas", "pallas_interpret"):
+        raise ValueError(
+            f"unknown gram impl {impl!r}; expected one of "
+            "('ref', 'pallas', 'pallas_interpret')")
     m, n = A.shape
     # Pick tile sizes that do not exceed the (padded) operand.
     bm_eff = min(bm, _round_up(m, 8))
@@ -49,7 +62,7 @@ def gram_packet(A: jax.Array, u: jax.Array, *, scale: float = 1.0,
     Ap = _pad_axis(_pad_axis(A, bm_eff, 0), bk_eff, 1)
     up = _pad_axis(u, bk_eff, 0)
     G, r = gram_packet_pallas(
-        Ap, up, scale=scale, reg=reg, bm=bm_eff, bk=bk_eff,
+        Ap, up, scale=scale, reg=reg, scale_r=scale_r, bm=bm_eff, bk=bk_eff,
         symmetric_skip=symmetric_skip,
         interpret=(impl == "pallas_interpret"))
     return G[:m, :m], r[:m]

@@ -16,14 +16,17 @@ def gram_ref(A: jax.Array, scale: float = 1.0, reg: float = 0.0) -> jax.Array:
 
 
 def gram_packet_ref(A: jax.Array, u: jax.Array, scale: float = 1.0,
-                    reg: float = 0.0) -> tuple[jax.Array, jax.Array]:
-    """Fused outer-iteration packet: (G, r) = (scale*AA^T + reg*I, scale*A@u).
+                    reg: float = 0.0, scale_r: float | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Fused outer-iteration packet: (G, r) = (scale*AA^T + reg*I, scale_r*A@u).
 
     One pass over A produces both the sb x sb Gram and the sb residual vector
     -- the compute-side twin of the fused one-all-reduce packet in
-    repro.core.distributed.
+    repro.core.distributed.  ``scale_r`` defaults to ``scale``; the dual
+    solvers use ``scale_r=1`` (raw Y^T w) with the 1/(lam n^2) Gram scale.
     """
     acc = jnp.float32 if A.dtype != jnp.float64 else jnp.float64
+    sr = scale if scale_r is None else scale_r
     G = gram_ref(A, scale, reg)
-    r = scale * jnp.einsum("ik,k->i", A, u, preferred_element_type=acc)
+    r = sr * jnp.einsum("ik,k->i", A, u, preferred_element_type=acc)
     return G, r.astype(acc)

@@ -6,7 +6,7 @@ dryrun.py (which sets XLA_FLAGS before any import) gets 512.
 """
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,5 +14,4 @@ def make_production_mesh(*, multi_pod: bool = False):
     2-pod DCN axis ('pod', 'data', 'model') = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)

@@ -25,7 +25,7 @@ from repro.core.distributed import lower_solver
 from repro.launch.mesh import make_production_mesh
 
 
-def run(out_dir: str = "artifacts/solver") -> list[dict]:
+def run(out_dir: str = "artifacts/solver", impl: str | None = None) -> list[dict]:
     os.makedirs(out_dir, exist_ok=True)
     results = []
     d, n = 4096, 1 << 22          # dense 4096 x 4.2M f32 panel (64 GiB), abstract
@@ -39,7 +39,7 @@ def run(out_dir: str = "artifacts/solver") -> list[dict]:
             t0 = time.time()
             comp = lower_solver(ca_bcd_sharded, mesh, d, n, 1e-3, b, s, iters,
                                 axis=axis, fuse_packet=fused,
-                                unroll=iters // s)
+                                unroll=iters // s, impl=impl)
             cs = count_in_compiled(comp)
             ca = comp.cost_analysis()
             if isinstance(ca, list):
@@ -64,5 +64,7 @@ def run(out_dir: str = "artifacts/solver") -> list[dict]:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="artifacts/solver")
+    ap.add_argument("--impl", default=None,
+                    help="Gram-packet backend: ref | pallas | pallas_interpret")
     args = ap.parse_args()
-    run(args.out)
+    run(args.out, impl=args.impl)

@@ -16,6 +16,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from .module import ParamSpec
 
 NEG_INF = -2.0 ** 30  # finite mask value: keeps fully-masked rows NaN-free
@@ -223,7 +225,7 @@ def decode_attention_seqsharded(q, cache_k, cache_v, pos, *, mesh, axis="model")
         out = packet[..., :Dh] / jnp.maximum(packet[..., Dh:], 1e-30)
         return out.reshape(B, 1, H, Dh).astype(qr.dtype)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(), P(None, axis, None, None), P(None, axis, None, None)),
         out_specs=P())

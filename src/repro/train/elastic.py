@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
 from repro.models.sharding import make_rules
 from .trainer import train_step_shardings
 
@@ -29,10 +30,9 @@ def plan_mesh(n_devices: int, tp: int = 16, pods: int | None = None):
         tp //= 2
     rest = n_devices // tp
     if pods and rest % pods == 0 and pods > 1:
-        return jax.make_mesh((pods, rest // pods, tp), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh((rest, tp), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return compat.make_mesh((pods, rest // pods, tp),
+                                ("pod", "data", "model"))
+    return compat.make_mesh((rest, tp), ("data", "model"))
 
 
 def reshard_state(state, model_cfg, new_mesh):

@@ -1,0 +1,40 @@
+"""Optional-hypothesis shim.
+
+Import ``given`` / ``settings`` / ``st`` from here instead of ``hypothesis``:
+when hypothesis is installed they are the real thing; when it is not, every
+``@given(...)``-decorated test collects normally and skips with a clear
+reason, so the rest of the module (and the tier-1 suite) still runs.
+"""
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on the environment
+    HAVE_HYPOTHESIS = False
+    HealthCheck = None
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies``: every attribute is a
+        callable returning None, enough to evaluate module-level strategy
+        expressions like ``st.integers(1, 5)``."""
+
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: None
+
+    st = _AnyStrategy()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed; "
+                                     "property test skipped")
+            def skipper():
+                pass
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn

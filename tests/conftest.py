@@ -1,12 +1,18 @@
 import pytest
-from hypothesis import HealthCheck, settings
+
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:  # hypothesis is optional: property tests skip via _hyp
+    settings = None
 
 # Keep the device world at 1 (the multi-pod dry-run runs in its own process);
 # distributed tests spawn subprocesses with their own XLA_FLAGS.
-settings.register_profile(
-    "ci", max_examples=20, deadline=None,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
-settings.load_profile("ci")
+if settings is not None:
+    settings.register_profile(
+        "ci", max_examples=20, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large])
+    settings.load_profile("ci")
 
 
 @pytest.fixture()

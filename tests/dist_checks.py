@@ -42,25 +42,38 @@ def check_solver_equivalence():
 
 
 def check_collective_counts():
-    """The paper's latency claim, measured: #collectives drops by exactly s."""
+    """The paper's latency claim, measured: #collectives drops by exactly s.
+
+    The baseline is the *fused* classical schedule (s=1, one Gram||residual
+    packet per iteration), which guarantees exactly one sync per iteration by
+    construction on every XLA version.  The paper-faithful unfused schedule
+    issues 2 reductions per iteration; whether they appear as 1 or 2 HLO ops
+    depends on XLA's all-reduce combiner, so it is asserted separately."""
     from repro.core import (ca_bcd_sharded, ca_bdcd_sharded,
                             count_in_compiled, make_solver_mesh)
     from repro.core.distributed import lower_solver
     mesh = make_solver_mesh(8)
     iters, s = 16, 8
     cl = lower_solver(ca_bcd_sharded, mesh, 64, 256, 1e-3, 8, 1, iters,
-                      fuse_packet=False, unroll=iters)
+                      fuse_packet=True, unroll=iters)
     ca = lower_solver(ca_bcd_sharded, mesh, 64, 256, 1e-3, 8, s, iters,
                       fuse_packet=True, unroll=iters // s)
     n_cl = count_in_compiled(cl).count
     n_ca = count_in_compiled(ca).count
-    assert n_cl == iters, n_cl          # one (combined) sync per iteration
+    assert n_cl == iters, n_cl          # one packet sync per iteration
     assert n_ca == iters // s, n_ca     # one sync per outer iteration
     assert n_cl / n_ca == s
 
+    # paper-faithful unfused baseline: Gram and residual reduced separately
+    # (2 messages/iter; newer XLA may combine the pair into one variadic op)
+    unf = lower_solver(ca_bcd_sharded, mesh, 64, 256, 1e-3, 8, 1, iters,
+                       fuse_packet=False, unroll=iters)
+    n_unf = count_in_compiled(unf).count
+    assert n_unf in (iters, 2 * iters), n_unf
+
     # dual layout too
     cl2 = lower_solver(ca_bdcd_sharded, mesh, 256, 64, 1e-3, 8, 1, iters,
-                       fuse_packet=False, unroll=iters, col_sharded=False)
+                       fuse_packet=True, unroll=iters, col_sharded=False)
     ca2 = lower_solver(ca_bdcd_sharded, mesh, 256, 64, 1e-3, 8, s, iters,
                        fuse_packet=True, unroll=iters // s, col_sharded=False)
     assert count_in_compiled(cl2).count / count_in_compiled(ca2).count == s
@@ -74,9 +87,9 @@ def check_collective_counts():
 
 def check_flash_decode():
     """Sequence-sharded flash-decoding == dense decode attention."""
-    from jax.sharding import AxisType
+    from repro import compat
     from repro.models.layers import decode_attention, decode_attention_seqsharded
-    mesh = jax.make_mesh((8,), ("model",), axis_types=(AxisType.Auto,))
+    mesh = compat.make_mesh((8,), ("model",))
     B, S, H, Hkv, Dh = 2, 64, 8, 4, 16
     ks = jax.random.split(jax.random.key(0), 3)
     q = jax.random.normal(ks[0], (B, 1, H, Dh), jnp.float32)
@@ -114,9 +127,9 @@ def check_elastic_reshard():
         t1.run()
         loss_8dev = None
         # restart on 4 devices (simulated shrink)
-        mesh4 = jax.sharding.Mesh(
-            np.array(jax.devices()[:4]).reshape(2, 2), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro import compat
+        mesh4 = compat.device_mesh(
+            np.array(jax.devices()[:4]).reshape(2, 2), ("data", "model"))
         rc2 = TrainRunConfig(steps=4, global_batch=8, seq_len=32, ckpt_dir=d,
                              save_every=2, log_every=1)
         t2 = Trainer(cfg, rc2, mesh=mesh4)

@@ -1,8 +1,9 @@
 """HLO collective-parser unit tests against synthetic and real HLO text."""
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.hlo_analysis import collective_summary, parse_collectives
 
 SYNTH = """
@@ -58,7 +59,7 @@ def test_real_hlo_psum():
     """End-to-end on real compiled HLO (1-device mesh still emits the op
     structure when contracted over a sharded axis on multi-dev meshes; here we
     just assert the parser tolerates real output)."""
-    mesh = jax.make_mesh((1,), ("d",), axis_types=(AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("d",))
     f = jax.jit(lambda x: x @ x.T,
                 in_shardings=NamedSharding(mesh, P(None, "d")))
     comp = f.lower(jax.ShapeDtypeStruct((8, 8), jnp.float32)).compile()

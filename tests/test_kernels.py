@@ -1,11 +1,12 @@
 """Pallas kernel validation: interpret-mode execution vs the pure-jnp oracle,
-swept over shapes (tile multiples and ragged) and dtypes, plus hypothesis."""
+swept over shapes (tile multiples and ragged) and dtypes, plus hypothesis
+(skipped with a reason when hypothesis is not installed)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given
-from hypothesis import strategies as st
+
+from _hyp import given, st
 
 from repro.kernels.gram import gram, gram_packet, gram_packet_ref, gram_ref
 

@@ -4,8 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given
-from hypothesis import strategies as st
+
+from _hyp import given, st
 
 from repro.models.mamba2 import naive_ssd, ssd_chunked
 

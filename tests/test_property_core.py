@@ -1,9 +1,10 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants (each test skips
+with a reason when hypothesis is not installed)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hyp import given, settings, st
 
 from repro.core import (bcd, bdcd, block_forward_substitution, ca_bcd,
                         ca_bdcd, overlap_matrix, sample_blocks, solve_spd)

@@ -2,8 +2,9 @@
 table serve every arch x mesh combination)."""
 import jax
 import pytest
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.models.sharding import make_rules
 
 
@@ -12,8 +13,7 @@ def mesh():
     # 1-device mesh shaped (1, 1): structure-only tests
     dev = jax.devices()[:1]
     import numpy as np
-    return jax.sharding.Mesh(np.array(dev).reshape(1, 1), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+    return compat.device_mesh(np.array(dev).reshape(1, 1), ("data", "model"))
 
 
 def test_divisible_dim_sharded(mesh):
@@ -26,8 +26,7 @@ def test_indivisible_dim_dropped():
     """14 heads on a 16-way model axis -> replicated, recorded in the audit."""
     import numpy as np
     devs = np.array(jax.devices() * 16)[:16].reshape(1, 16)
-    mesh16 = jax.sharding.Mesh(devs, ("data", "model"),
-                               axis_types=(AxisType.Auto,) * 2)
+    mesh16 = compat.device_mesh(devs, ("data", "model"))
     rules = make_rules(mesh16)
     spec = rules.spec_for((896, 14, 64), ("embed", "heads", "head_dim"))
     assert spec == P(None, None, None)
