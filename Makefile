@@ -1,4 +1,4 @@
-.PHONY: test test-fast bench
+.PHONY: test test-fast bench bench-smoke
 
 # Tier-1 verify (ROADMAP.md): the full suite, fail-fast.
 test:
@@ -10,3 +10,9 @@ test-fast:
 
 bench:
 	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m benchmarks.run
+
+# Tiny-shape kernel benches in ref/interpret mode; writes the BENCH_smoke.json
+# perf-trajectory baseline (wall us + modeled HBM bytes/iter of the panel-free
+# packet vs the gather-then-pack baseline).
+bench-smoke:
+	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m benchmarks.run --smoke

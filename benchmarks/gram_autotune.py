@@ -1,0 +1,105 @@
+"""Gram-packet tile autotuning sweep: measure (bm, bk) candidates per
+(sb, n, dtype) operating point and emit the table ``kernels/gram/tuning.py``
+consumes (``tuning.load_table`` / the ``REPRO_GRAM_TUNING`` env var).
+
+On TPU (``--impl pallas``) this times the real kernel and the table entries
+are meaningful; on the CPU container the ref backend ignores tile sizes, so
+the sweep degenerates to recording the heuristic pick per shape bucket --
+the table schema and plumbing are exercised end-to-end either way, and a TPU
+run of the same command ships real numbers without code changes.
+
+    PYTHONPATH=src python -m benchmarks.gram_autotune [--out PATH] [--impl I]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gram import gram_packet, tuning
+
+from ._util import row, timed
+
+# Solver operating points: sb = s*b, n = points (or points/P for the sharded
+# local packet).
+SHAPES = [(32, 1024), (64, 4096), (128, 4096), (128, 32768)]
+SMOKE_SHAPES = [(16, 512)]
+DTYPES = [jnp.float32]
+
+
+def _candidates(m: int, n: int) -> list[tuple[int, int]]:
+    cands = [(bm, bk) for bm in tuning.BM_CANDIDATES if bm <= max(m, 8)
+             for bk in tuning.BK_CANDIDATES if bk <= max(n, 128)]
+    return cands or [(8, 128)]
+
+
+def sweep(shapes, dtypes, impl: str) -> tuple[list[str], dict]:
+    """Returns (CSV rows, table mapping bucket-key -> best (bm, bk))."""
+    rows, table = [], {}
+    tile_sweep = impl in ("pallas",)  # ref ignores tiles; interpret is Python
+    for dtype in dtypes:
+        dname = jnp.dtype(dtype).name
+        for m, n in shapes:
+            A = jax.random.normal(jax.random.key(0), (m, n), dtype)
+            u = jax.random.normal(jax.random.key(1), (n,), dtype)
+            cands = (_candidates(m, n) if tile_sweep
+                     else [tuning.pick_tiles(m, n, dtype)])
+            best, best_us = None, float("inf")
+            for bm, bk in cands:
+                fn = jax.jit(lambda A, u, bm=bm, bk=bk: gram_packet(
+                    A, u, scale=1.0 / n, impl=impl, bm=bm, bk=bk))
+                us = timed(fn, A, u)
+                if us < best_us:
+                    best, best_us = (bm, bk), us
+            key = (tuning._bucket(tuning._round_up(m, tuning.ROW_GRANULE)),
+                   tuning._bucket(tuning._round_up(n, tuning.LANE_GRANULE)),
+                   dname)
+            table[f"{key[0]},{key[1]},{key[2]}"] = list(best)
+            rows.append(row(f"autotune/gram_{m}x{n}_{dname}", best_us,
+                            f"bm={best[0]} bk={best[1]} impl={impl} "
+                            f"swept={len(cands)}"))
+    return rows, table
+
+
+def write_table(table: dict, impl: str, out: str) -> None:
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"backend": impl, "jax_backend": jax.default_backend(),
+                   "table": table}, f, indent=2, sort_keys=True)
+
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "out",
+                           "gram_tuning.json")
+
+
+def run(impl: str | None = None, smoke: bool = False,
+        out: str | None = DEFAULT_OUT) -> list[str]:
+    """``out`` defaults to benchmarks/out/gram_tuning.json so harness runs
+    (``make bench`` / ``make bench-smoke``) persist the swept table -- on TPU
+    that file is exactly what ``REPRO_GRAM_TUNING`` consumes.  Pass
+    ``out=None`` to sweep without writing."""
+    impl = impl or ("pallas" if jax.default_backend() == "tpu" else "ref")
+    shapes = SMOKE_SHAPES if smoke else SHAPES
+    rows, table = sweep(shapes, DTYPES, impl)
+    if out:
+        write_table(table, impl, out)
+        tuning.register_table(table)   # make this process benefit immediately
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--impl", default=None, help="ref | pallas | pallas_interpret")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for line in run(impl=args.impl, smoke=args.smoke, out=args.out):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,21 +1,26 @@
 """Gram-kernel micro-benchmark: the paper's BLAS-1/2 -> BLAS-3 insight,
-measured.  s classical b x b Grams vs ONE (sb x sb) Gram over the same data
-(XLA CPU here; the Pallas path targets the TPU MXU with identical tiling)."""
+measured (s classical b x b Grams vs ONE (sb x sb) Gram over the same data),
+plus the PR-2 panel-free hot path: ``gram_packet_sampled`` + ``panel_apply``
+straight from (X, indices) vs the gather-then-``gram_packet`` baseline that
+materializes the sampled panel first.  Wall time is XLA CPU here (the Pallas
+path targets the TPU MXU with identical tiling); HBM bytes/iteration come
+from the cost model's gather-traffic term (``packet_hbm_bytes``), which is
+what the roofline uses to predict the win on TPU.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.gram import gram_packet
+from repro.core.cost_model import packet_traffic_breakdown
+from repro.kernels.gram import (gram_packet, gram_packet_sampled, panel_apply,
+                                tuning)
 
 from ._util import row, timed
 
 
-def run(impl: str | None = None) -> list[str]:
-    impl = impl or "ref"
+def _blas3_rows(impl: str, n: int, b: int, s: int) -> list[str]:
     rows = []
-    n = 1 << 15
-    b, s = 8, 16
     key = jax.random.key(0)
     A_small = [jax.random.normal(jax.random.key(i), (b, n), jnp.float32)
                for i in range(s)]
@@ -37,12 +42,66 @@ def run(impl: str | None = None) -> list[str]:
                     f"s={s} b={b} n={n}"))
     rows.append(row("kernels/gram_ca_one_sbxsb", us_ca,
                     f"blas3_speedup={us_cl/us_ca:.2f}x"))
+    return rows
+
+
+def _panel_free_rows(impl: str, d: int, n: int, sb: int) -> list[str]:
+    """Gather-then-packet baseline vs the fused sampled packet, both covering
+    the full hot path (packet + deferred vector update)."""
+    X = jax.random.normal(jax.random.key(1), (d, n), jnp.float32)
+    u = jax.random.normal(jax.random.key(2), (n,), jnp.float32)
+    flat = jax.random.randint(jax.random.key(3), (sb,), 0, d, jnp.int32)
+    v = jax.random.normal(jax.random.key(4), (sb,), jnp.float32)
+
+    @jax.jit
+    def baseline(X, flat, u, v):
+        Y = X[flat, :]                                # materialized panel
+        G, r = gram_packet(Y, u, scale=1.0 / n, impl=impl)
+        return G, r, Y.T @ v                          # apply re-reads Y
+
+    @jax.jit
+    def fused(X, flat, u, v):
+        G, r = gram_packet_sampled(X, flat, u, scale=1.0 / n, impl=impl)
+        return G, r, panel_apply(X, flat, v, impl=impl)
+
+    us_base = timed(baseline, X, flat, u, v)
+    us_fused = timed(fused, X, flat, u, v)
+    bm = tuning.pick_tiles(sb, n, jnp.float32)[0]
+    traffic = packet_traffic_breakdown(sb, n, itemsize=4, bm=bm)
+    rows = [
+        row("kernels/sampled_packet_baseline", us_base,
+            f"sb={sb} n={n} hbm_bytes={traffic['baseline_bytes']:.0f}"),
+        row("kernels/sampled_packet_fused", us_fused,
+            f"hbm_bytes={traffic['panel_free_bytes']:.0f} "
+            f"hbm_ratio={traffic['ratio']:.3f} "
+            f"wall_speedup={us_base/us_fused:.2f}x"),
+    ]
+    return rows
+
+
+# (d, n, sb) of the panel-free comparison; run.py's smoke baseline records
+# the matching modeled HBM bytes, so keep these in one place.
+PANEL_SHAPE = (512, 1 << 15, 128)
+PANEL_SHAPE_SMOKE = (128, 1 << 11, 32)
+
+
+def run(impl: str | None = None, smoke: bool = False) -> list[str]:
+    impl = impl or "ref"
+    if smoke:
+        n, b, s = 1 << 11, 4, 8
+        d, np_, sbp = PANEL_SHAPE_SMOKE
+    else:
+        n, b, s = 1 << 15, 8, 16
+        d, np_, sbp = PANEL_SHAPE
+    rows = _blas3_rows(impl, n, b, s)
+    rows += _panel_free_rows(impl, d, np_, sbp)
 
     # pallas interpret-mode correctness/latency reference (not a perf number
     # on CPU -- interpret mode executes the kernel body in Python)
-    us_pi = timed(lambda: gram_packet(A_big[:, :2048], u[:2048],
-                                      scale=1.0 / n, impl="pallas_interpret"),
-                  iters=1)
+    A = jax.random.normal(jax.random.key(5), (s * b, 2048), jnp.float32)
+    u2 = jax.random.normal(jax.random.key(6), (2048,), jnp.float32)
+    us_pi = timed(lambda: gram_packet(A, u2, scale=1.0 / n,
+                                      impl="pallas_interpret"), iters=1)
     rows.append(row("kernels/gram_pallas_interpret_2k", us_pi,
                     "correctness-path only (CPU)"))
     return rows

@@ -9,19 +9,22 @@ from .distributed import (bcd_sharded, bdcd_sharded, ca_bcd_sharded,
                           ca_bdcd_sharded, lower_solver, make_solver_mesh)
 from .hlo_analysis import (CollectiveSummary, collective_summary,
                            count_in_compiled, parse_collectives)
-from repro.kernels.gram import gram, gram_packet
+from repro.kernels.gram import (gram, gram_packet, gram_packet_sampled,
+                                normal_matvec, panel_apply, panel_matvec)
 from .krylov import cg_ridge, cg_ridge_history
 from .sampling import overlap_matrix, sample_blocks, sample_blocks_balanced
 from .subproblem import block_forward_substitution, solve_spd
-from .tsqr import tsqr, tsqr_ridge
+from .tsqr import cholqr_r, tsqr, tsqr_ridge
 from . import cost_model
 
 __all__ = [
     "SolveResult", "bcd", "ca_bcd", "bdcd", "ca_bdcd", "objective",
     "ridge_exact", "cg_ridge", "cg_ridge_history", "tsqr", "tsqr_ridge",
+    "cholqr_r",
     "bcd_sharded", "bdcd_sharded", "ca_bcd_sharded", "ca_bdcd_sharded",
     "lower_solver", "make_solver_mesh",
-    "gram", "gram_packet",
+    "gram", "gram_packet", "gram_packet_sampled", "panel_apply",
+    "panel_matvec", "normal_matvec",
     "sample_blocks", "sample_blocks_balanced", "overlap_matrix",
     "block_forward_substitution", "solve_spd",
     "CollectiveSummary", "collective_summary", "count_in_compiled",

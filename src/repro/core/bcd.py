@@ -16,6 +16,15 @@ forward substitution against
 
 whose diagonal blocks are the per-iteration Gamma_{sk+j} and whose strictly
 lower blocks carry both correction sums of Eq. (8).
+
+Data flow (panel-free since PR 2): the hot loops never materialize the sampled
+panel ``Y = X[flat, :]``.  The sb x sb packet comes straight from (X, flat)
+via ``gram_packet_sampled`` -- on TPU the kernel scalar-prefetches the block
+indices and DMA-gathers the sampled rows HBM->VMEM -- and the deferred vector
+updates (Eqs. 5/10, ``alpha += Y^T dws``) are computed from the same (X, flat)
+pair by ``panel_apply``.  The panel's three HBM crossings per outer iteration
+(gather write, Gram read, apply read) drop to zero; only the sampled rows of X
+are read, once per consumer (see ``repro.core.cost_model.packet_hbm_bytes``).
 """
 from __future__ import annotations
 
@@ -24,7 +33,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.gram import gram_packet
+from repro.kernels.gram import gram_packet_sampled, panel_apply
 
 from .sampling import overlap_matrix, sample_blocks
 from .subproblem import block_forward_substitution, solve_spd
@@ -58,31 +67,40 @@ def _metrics(alpha, w, y, lam, w_ref):
     return m
 
 
+def _tile_kw(tiles):
+    if tiles is None:
+        return {}
+    return {"bm": tiles[0], "bk": tiles[1]}
+
+
 def bcd(X: jax.Array, y: jax.Array, lam: float, b: int, iters: int,
         key: jax.Array, *, w0: jax.Array | None = None,
         idx: jax.Array | None = None, w_ref: jax.Array | None = None,
-        impl: str | None = None) -> SolveResult:
+        impl: str | None = None,
+        tiles: tuple[int, int] | None = None) -> SolveResult:
     """Classical BCD, Algorithm 1 (residual form).  One Gram + one subproblem
     per iteration; in the distributed setting this is one synchronization per
     iteration, which is what the CA variant removes.  ``impl`` selects the
-    Gram-packet backend (``repro.core.gram_packet``)."""
+    Gram-packet backend (``repro.core.gram_packet``); ``tiles`` pins the
+    kernel's (bm, bk) instead of the autotuned pick."""
     d, n = X.shape
     if idx is None:
         idx = sample_blocks(key, d, b, iters)
     w = jnp.zeros((d,), X.dtype) if w0 is None else w0
     alpha = X.T @ w if w0 is not None else jnp.zeros((n,), X.dtype)
+    tk = _tile_kw(tiles)
 
     def step(carry, idx_h):
         w, alpha = carry
-        Xb = X[idx_h, :]                                   # (b, n) sampled rows
-        # One fused packet: Gamma = Xb Xb^T / n + lam I and the residual
-        # contribution Xb (y - alpha) / n of the Eq. (7) rhs.
-        Gamma, r_x = gram_packet(Xb, y - alpha, scale=1.0 / n, reg=lam,
-                                 impl=impl)
+        # One fused panel-free packet: Gamma = Xb Xb^T / n + lam I and the
+        # residual contribution Xb (y - alpha) / n of the Eq. (7) rhs, with
+        # Xb = X[idx_h, :] gathered inside the kernel.
+        Gamma, r_x = gram_packet_sampled(X, idx_h, y - alpha, scale=1.0 / n,
+                                         reg=lam, impl=impl, **tk)
         r = r_x - lam * w[idx_h]                           # Eq. (7) rhs
         dw = solve_spd(Gamma, r)
         w = w.at[idx_h].add(dw)
-        alpha = alpha + Xb.T @ dw                          # Eq. (5)
+        alpha = alpha + panel_apply(X, idx_h, dw, impl=impl, **tk)  # Eq. (5)
         return (w, alpha), _metrics(alpha, w, y, lam, w_ref)
 
     (w, alpha), hist = jax.lax.scan(step, (w, alpha), idx)
@@ -92,15 +110,17 @@ def bcd(X: jax.Array, y: jax.Array, lam: float, b: int, iters: int,
 def ca_bcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int, iters: int,
            key: jax.Array, *, w0: jax.Array | None = None,
            idx: jax.Array | None = None, w_ref: jax.Array | None = None,
-           track_cond: bool = False, impl: str | None = None) -> SolveResult:
+           track_cond: bool = False, impl: str | None = None,
+           tiles: tuple[int, int] | None = None) -> SolveResult:
     """CA-BCD, Algorithm 2.  ``iters`` counts *inner* iterations; must be a
     multiple of ``s``.  Consumes the same index stream as :func:`bcd` (same
     ``key`` => identical iterates in exact arithmetic).
 
     Per outer iteration: ONE sb x sb Gram packet (the only communication in
-    the distributed version; computed by the ``impl``-selected backend with
-    the lam-regularized diagonal fused in), then ``s`` local solves via block
-    forward substitution, then deferred vector updates (Eqs. 9-10).
+    the distributed version; built panel-free from (X, flat) by the
+    ``impl``-selected backend with the lam-regularized diagonal fused in),
+    then ``s`` local solves via block forward substitution, then deferred
+    vector updates (Eqs. 9-10) from the same (X, flat) pair.
     """
     d, n = X.shape
     if iters % s != 0:
@@ -111,15 +131,17 @@ def ca_bcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int, iters: int,
     w = jnp.zeros((d,), X.dtype) if w0 is None else w0
     alpha = X.T @ w if w0 is not None else jnp.zeros((n,), X.dtype)
     sb = s * b
+    tk = _tile_kw(tiles)
 
     def outer(carry, idx_k):
         w, alpha = carry
         flat = idx_k.reshape(sb)
-        Y = X[flat, :]                                     # (sb, n)
-        # One fused packet: gram = Y Y^T / n + lam I (regularized diagonal
-        # inside the kernel) and r = Y (y - alpha) / n, one all-reduce in the
+        # One fused panel-free packet: gram = Y Y^T / n + lam I (regularized
+        # diagonal inside the kernel) and r = Y (y - alpha) / n for
+        # Y = X[flat, :], gathered inside the kernel; one all-reduce in the
         # distributed version.
-        gram, r = gram_packet(Y, y - alpha, scale=1.0 / n, reg=lam, impl=impl)
+        gram, r = gram_packet_sampled(X, flat, y - alpha, scale=1.0 / n,
+                                      reg=lam, impl=impl, **tk)
         O = overlap_matrix(flat).astype(X.dtype)           # local: shared-seed trick
         # lam I is already on gram's diagonal; add only the off-diagonal
         # duplicate-index overlap terms (O's diagonal is exactly 1).
@@ -135,7 +157,7 @@ def ca_bcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int, iters: int,
             idx_j = sl(flat, j * b, b)
             dw_j = sl(dws, j * b, b)
             wj = wj.at[idx_j].add(dw_j)
-            aj = aj + sl(Y, j * b, b).T @ dw_j
+            aj = aj + panel_apply(X, idx_j, dw_j, impl=impl, **tk)
             return (wj, aj), _metrics(aj, wj, y, lam, w_ref)
 
         (w, alpha), hist = jax.lax.scan(inner, (w, alpha), jnp.arange(s))

@@ -13,15 +13,30 @@ CA identity: the inner loop is block forward substitution against
 
 with base_j = (1/n) (Y_j^T w_sk - alpha_sk[idx_j] - y[idx_j]); diagonal blocks
 of A are the Theta_{sk+j} of Eq. (18).
+
+Data flow (panel-free since PR 2): the dual samples *columns* of X, so the
+solvers hold ``XT = X.T`` -- materialized once, outside the hot loop -- and
+the sampled Gram ``Y^T Y = XT[flat, :] XT[flat, :]^T`` comes straight from
+(XT, flat) via ``gram_packet_sampled`` without ever forming the (d, sb)
+panel.  The deferred primal updates (Eq. 15/19, ``w -= Y das / (lam n)``) use
+``panel_apply(XT, flat, das)`` == ``X[:, flat] @ das`` from the same pair.
+
+Memory tradeoff: XT doubles the dataset's resident footprint for the length
+of the solve (X itself stays live for the objective metrics and the caller's
+buffer).  This is deliberate -- a column-sampled kernel would need
+lane-strided DMA gathers, which defeats the row-contiguous copies the
+sampled kernel relies on -- and it trades a one-time O(dn) cost for zero
+per-iteration panel traffic; a column-major sampled variant that avoids the
+second copy is a ROADMAP open item.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.gram import gram_packet
+from repro.kernels.gram import gram_packet_sampled, panel_apply
 
-from .bcd import SolveResult, _metrics
+from .bcd import SolveResult, _metrics, _tile_kw
 from .sampling import overlap_matrix, sample_blocks
 from .subproblem import block_forward_substitution, solve_spd
 
@@ -29,7 +44,8 @@ from .subproblem import block_forward_substitution, solve_spd
 def bdcd(X: jax.Array, y: jax.Array, lam: float, b: int, iters: int,
          key: jax.Array, *, alpha0: jax.Array | None = None,
          idx: jax.Array | None = None, w_ref: jax.Array | None = None,
-         impl: str | None = None) -> SolveResult:
+         impl: str | None = None,
+         tiles: tuple[int, int] | None = None) -> SolveResult:
     """Classical BDCD, Algorithm 3.  ``b`` is the paper's b'.  ``impl``
     selects the Gram-packet backend (``repro.core.gram_packet``)."""
     d, n = X.shape
@@ -37,18 +53,22 @@ def bdcd(X: jax.Array, y: jax.Array, lam: float, b: int, iters: int,
         idx = sample_blocks(key, n, b, iters)
     alpha = jnp.zeros((n,), X.dtype) if alpha0 is None else alpha0
     w = -X @ alpha / (lam * n)
+    XT = X.T           # once, outside the hot loop (columns become rows)
+    tk = _tile_kw(tiles)
 
     def step(carry, idx_h):
         w, alpha = carry
-        Xc = X[:, idx_h]                                   # (d, b) sampled columns
-        # One fused packet: Theta = Xc^T Xc / (lam n^2) + I/n (regularized
-        # diagonal fused) and the raw projection Xc^T w (scale_r=1).
-        Theta, u = gram_packet(Xc.T, w, scale=1.0 / (lam * n * n),
-                               scale_r=1.0, reg=1.0 / n, impl=impl)
+        # One fused panel-free packet: Theta = Xc^T Xc / (lam n^2) + I/n
+        # (regularized diagonal fused) and the raw projection Xc^T w
+        # (scale_r=1), with Xc^T = XT[idx_h, :] gathered inside the kernel.
+        Theta, u = gram_packet_sampled(XT, idx_h, w, scale=1.0 / (lam * n * n),
+                                       scale_r=1.0, reg=1.0 / n, impl=impl,
+                                       **tk)
         rhs = (u - alpha[idx_h] - y[idx_h]) / n            # Eq. (17)
         da = solve_spd(Theta, rhs)
         alpha = alpha.at[idx_h].add(da)
-        w = w - Xc @ da / (lam * n)                        # Eq. (15)
+        # Eq. (15): w -= Xc @ da / (lam n) == XT[idx_h, :]^T da / (lam n).
+        w = w - panel_apply(XT, idx_h, da, impl=impl, **tk) / (lam * n)
         return (w, alpha), _metrics_dual(X, alpha, w, y, lam, w_ref)
 
     (w, alpha), hist = jax.lax.scan(step, (w, alpha), idx)
@@ -72,7 +92,8 @@ def _metrics_dual(X, alpha, w, y, lam, w_ref):
 def ca_bdcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int, iters: int,
             key: jax.Array, *, alpha0: jax.Array | None = None,
             idx: jax.Array | None = None, w_ref: jax.Array | None = None,
-            track_cond: bool = False, impl: str | None = None) -> SolveResult:
+            track_cond: bool = False, impl: str | None = None,
+            tiles: tuple[int, int] | None = None) -> SolveResult:
     """CA-BDCD, Algorithm 4.  Same index stream as :func:`bdcd` => identical
     iterates in exact arithmetic; one sb' x sb' Gram-packet all-reduce per
     outer iteration in the distributed version (backend per ``impl``)."""
@@ -84,16 +105,20 @@ def ca_bdcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int, iters: int,
     idx = idx.reshape(iters // s, s, b)
     alpha = jnp.zeros((n,), X.dtype) if alpha0 is None else alpha0
     w = -X @ alpha / (lam * n)
+    XT = X.T           # once, outside the hot loop
     sb = s * b
+    tk = _tile_kw(tiles)
 
     def outer(carry, idx_k):
         w, alpha = carry
         flat = idx_k.reshape(sb)
-        Y = X[:, flat]                                     # (d, sb)
-        # One fused packet: gram = Y^T Y / (lam n^2) + I/n and the raw
-        # projection Y^T w; one all-reduce in the distributed version.
-        gram, u = gram_packet(Y.T, w, scale=1.0 / (lam * n * n),
-                              scale_r=1.0, reg=1.0 / n, impl=impl)
+        # One fused panel-free packet: gram = Y^T Y / (lam n^2) + I/n and the
+        # raw projection Y^T w for Y = X[:, flat] (i.e. Y^T = XT[flat, :],
+        # gathered inside the kernel); one all-reduce in the distributed
+        # version.
+        gram, u = gram_packet_sampled(XT, flat, w, scale=1.0 / (lam * n * n),
+                                      scale_r=1.0, reg=1.0 / n, impl=impl,
+                                      **tk)
         O = overlap_matrix(flat).astype(X.dtype)
         # I/n is already on gram's diagonal; add only the off-diagonal
         # duplicate-index overlap terms (O's diagonal is exactly 1).
@@ -107,7 +132,7 @@ def ca_bdcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int, iters: int,
             idx_j = sl(flat, j * b, b)
             da_j = sl(das, j * b, b)
             aj = aj.at[idx_j].add(da_j)
-            wj = wj - jax.lax.dynamic_slice_in_dim(Y, j * b, b, axis=1) @ da_j / (lam * n)
+            wj = wj - panel_apply(XT, idx_j, da_j, impl=impl, **tk) / (lam * n)
             return (wj, aj), _metrics_dual(X, aj, wj, y, lam, w_ref)
 
         (w, alpha), hist = jax.lax.scan(inner, (w, alpha), jnp.arange(s))

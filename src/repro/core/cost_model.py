@@ -114,6 +114,64 @@ ALGORITHMS: dict[str, Callable[..., Costs]] = {
 }
 
 
+# --------------------------------------------------------------------------
+# Per-device HBM traffic of the Gram-packet hot path (the gather term)
+# --------------------------------------------------------------------------
+# The alpha-beta-gamma model above counts inter-device words (W); on TPU the
+# on-device roofline is governed by HBM bytes instead, and the dominant term
+# of one outer iteration is how often the sampled sb x n panel crosses HBM.
+#
+# Both Gram kernels stream their row/column operand tiles from HBM once per
+# grid cell, so with B = ceil(sb/bm) row blocks the Gram contraction itself
+# reads the panel's worth of rows B times (B^2 cells x bm rows each, halved
+# by the symmetric skip but doubled by the two operand panels).  On top of
+# that:
+#
+# materialized baseline (PR 1): Y = X[flat, :] built before the kernel
+#     read X rows (gather) + write Y + B x read Y (Gram) + read Y (apply)
+#     -> B + 3 panel crossings.
+# panel-free (gram_packet_sampled / panel_apply): the kernel gathers rows
+#     straight to VMEM -> B x read X rows (Gram) + read X rows (apply), no
+#     materialized panel -> B + 1 crossings.
+#
+# The win is exactly the gather write + gather read + one re-read that the
+# fused kernel skips: ratio (B+1)/(B+3), i.e. ~1/2 at the solvers' operating
+# points (sb <= bm=128 => B=1) and fading as sb/bm grows -- which is why the
+# tuning table keeps bm at the sb it can afford in VMEM.
+#
+# Shared smaller terms (both schedules): the residual operand u (n), the
+# alpha/w tile read+write (2n), the sb x sb Gram + sb residual written once,
+# and the sb-vector of updates read back by the apply.
+
+def packet_hbm_bytes(sb: int, n: int, itemsize: int = 4,
+                     panel_free: bool = True, bm: int = 128) -> float:
+    """Modeled HBM bytes of ONE outer iteration's packet + deferred apply.
+    ``bm`` is the kernel's row-tile size (pass the tuning-table pick)."""
+    panel = sb * n
+    blocks = -(-sb // max(bm, 1))
+    shared = 3 * n + sb * sb + 2 * sb
+    crossings = (blocks + 1) if panel_free else (blocks + 3)
+    return float((crossings * panel + shared) * itemsize)
+
+
+def packet_traffic_breakdown(sb: int, n: int, itemsize: int = 4,
+                             bm: int = 128) -> dict:
+    """Both schedules' modeled bytes plus the ratio (the bench-smoke
+    baseline records this; (B+1)/(B+3) ~= 1/2 while sb <= bm)."""
+    base = packet_hbm_bytes(sb, n, itemsize, panel_free=False, bm=bm)
+    fused = packet_hbm_bytes(sb, n, itemsize, panel_free=True, bm=bm)
+    return {"baseline_bytes": base, "panel_free_bytes": fused,
+            "ratio": fused / base}
+
+
+def packet_memory_time(sb: int, n: int, hbm_bytes_per_s: float,
+                       itemsize: int = 4, panel_free: bool = True,
+                       bm: int = 128) -> float:
+    """Memory-bound roofline time of one outer iteration (the Gram itself is
+    MXU-bound only once n/P is small enough that the packet fits in VMEM)."""
+    return packet_hbm_bytes(sb, n, itemsize, panel_free, bm) / hbm_bytes_per_s
+
+
 def best_s(cost_fn, machine: MachineModel, d: int, n: int, P: int, b: int,
            H: int, s_grid=None) -> tuple[int, float]:
     """min_s T(s): returns (s*, T(s*)).  s=1 recovers the classical algorithm,

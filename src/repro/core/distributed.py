@@ -25,11 +25,19 @@ All devices compute identical block indices from the replicated key (the
 paper's shared-seed trick), so the overlap terms and the inner block forward
 substitution are local and replicated.
 
-The local (G, r) contributions are built by the Gram-backend dispatch layer
-(``repro.kernels.gram.gram_packet``, re-exported as ``repro.core.gram_packet``)
--- jnp reference on CPU, the Pallas kernel on TPU -- selected per solver via
-``impl=``; mesh construction and shard_map go through ``repro.compat`` so the
-same code runs on JAX 0.4.37 and newer API generations.
+The local (G, r) contributions are built panel-free by the Gram-backend
+dispatch layer (``repro.kernels.gram.gram_packet_sampled``): each shard hands
+the kernel its local X shard plus the replicated block indices, and the
+sampled rows are gathered inside the kernel (scalar-prefetched indices, rows
+DMA'd HBM->VMEM on TPU; jnp gather on the CPU reference).  The local sampled
+panel ``Yl`` is never materialized -- the deferred vector updates
+(``al += Yl^T dws`` / ``wl -= Yl das``) run through ``panel_apply`` on the
+same (shard, indices) pair.  The dual layout pre-transposes its shard once,
+outside the scan, so column sampling becomes row sampling -- at the cost of
+2x the shard's resident footprint while the solve runs (see the memory note
+in ``repro.core.bdcd``).  ``impl=`` selects the backend per solver; mesh
+construction and shard_map go through ``repro.compat`` so the same code runs
+on JAX 0.4.37 and newer API generations.
 """
 from __future__ import annotations
 
@@ -41,8 +49,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
-from repro.kernels.gram import gram_packet
+from repro.kernels.gram import gram_packet_sampled, panel_apply
 
+from .bcd import _tile_kw
 from .sampling import overlap_matrix, sample_blocks
 from .subproblem import block_forward_substitution, solve_spd
 
@@ -93,11 +102,13 @@ def ca_bcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
                    s: int, iters: int, key: jax.Array, *,
                    axis: str = "shards", fuse_packet: bool = True,
                    idx: jax.Array | None = None, unroll: int = 1,
-                   impl: str | None = None):
+                   impl: str | None = None,
+                   tiles: tuple[int, int] | None = None):
     """CA-BCD with X (d, n) sharded over columns.  s=1 gives the classical
     schedule (one Gram reduction per iteration).  Returns (w replicated,
     alpha sharded over n).  ``impl`` selects the Gram-packet backend for the
-    local (G, r) contributions (see ``repro.kernels.gram``)."""
+    local (G, r) contributions (see ``repro.kernels.gram``); ``tiles`` pins
+    the kernel's (bm, bk) instead of the autotuned pick."""
     d, n = X.shape
     if iters % s:
         raise ValueError(f"iters={iters} must be a multiple of s={s}")
@@ -106,6 +117,7 @@ def ca_bcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
     idx = idx.reshape(iters // s, s, b)
     sb = s * b
     dtype = X.dtype
+    tk = _tile_kw(tiles)
     n_shards = math.prod(mesh.shape[a] for a in _axes(axis))
     X = _pad_to(X, n_shards, axis=1)
     y = _pad_to(y, n_shards, axis=0)
@@ -118,17 +130,18 @@ def ca_bcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
 
         def outer(carry, idx_k):
             w, al = carry
+            # Local (Gram, residual) contribution, panel-free: the sampled
+            # rows of the local shard are gathered inside the kernel; reg
+            # stays 0 here -- the regularizer is added once, after the psum.
             flat = idx_k.reshape(sb)
-            Yl = Xl[flat, :]                       # (sb, n/P) sampled rows, local panel
-            # Local (Gram, residual) contribution via the kernel dispatch layer;
-            # reg stays 0 here -- the regularizer is added once, after the psum.
-            Gl, rl = gram_packet(Yl, yl - al, scale=1.0 / n, reg=0.0, impl=impl)
+            Gl, rl = gram_packet_sampled(Xl, flat, yl - al, scale=1.0 / n,
+                                         reg=0.0, impl=impl, **tk)
             G, r = _psum_packet(Gl, rl, axis, fuse_packet)   # THE sync point
             A = G + lam * overlap_matrix(flat).astype(dtype)
             base = r - lam * w[flat]
             dws = block_forward_substitution(A, base, s, b)  # local, replicated
             w = w.at[flat].add(dws)                          # Eq. (9), replicated
-            al = al + Yl.T @ dws                             # Eq. (10), local shard
+            al = al + panel_apply(Xl, flat, dws, impl=impl, **tk)  # Eq. (10), local shard
             return (w, al), None
 
         (w, al), _ = jax.lax.scan(outer, (w, al), idx_rep, unroll=unroll)
@@ -144,12 +157,14 @@ def ca_bcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
 def bcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
                 iters: int, key: jax.Array, *, axis: str = "shards",
                 fuse_packet: bool = False, idx: jax.Array | None = None,
-                impl: str | None = None):
+                impl: str | None = None,
+                tiles: tuple[int, int] | None = None):
     """Classical distributed BCD (Theorem 1 schedule): per-iteration reductions.
     Implemented as CA with s=1; ``fuse_packet=False`` keeps the paper's separate
     Gram and residual reductions."""
     return ca_bcd_sharded(mesh, X, y, lam, b, 1, iters, key, axis=axis,
-                          fuse_packet=fuse_packet, idx=idx, impl=impl)
+                          fuse_packet=fuse_packet, idx=idx, impl=impl,
+                          tiles=tiles)
 
 
 # --------------------------------------------------------------------------
@@ -160,7 +175,8 @@ def ca_bdcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
                     s: int, iters: int, key: jax.Array, *,
                     axis: str = "shards", fuse_packet: bool = True,
                     idx: jax.Array | None = None, unroll: int = 1,
-                    impl: str | None = None):
+                    impl: str | None = None,
+                    tiles: tuple[int, int] | None = None):
     """CA-BDCD with X (d, n) sharded over rows.  Returns (w sharded over d,
     alpha replicated).  ``impl`` selects the Gram-packet backend."""
     d, n = X.shape
@@ -171,27 +187,35 @@ def ca_bdcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
     idx = idx.reshape(iters // s, s, b)
     sb = s * b
     dtype = X.dtype
+    tk = _tile_kw(tiles)
     n_shards = math.prod(mesh.shape[a] for a in _axes(axis))
     X = _pad_to(X, n_shards, axis=0)
 
     def body(Xl, y_rep, idx_rep):
         wl = _pvary(jnp.zeros(Xl.shape[:1], dtype), axis)  # local shard of w
         alpha = jnp.zeros((n,), dtype)             # replicated dual iterate
+        XlT = Xl.T         # once per shard, outside the scan: the sampled
+        # columns of Xl become rows, so the packet and the deferred update
+        # stay panel-free inside the hot loop.
 
         def outer(carry, idx_k):
             wl, alpha = carry
             flat = idx_k.reshape(sb)
-            Yl = Xl[:, flat]                       # (d/P, sb) sampled columns
-            # One packet: Gl = Yl^T Yl / (lam n^2) plus the *unscaled* local
-            # contribution to Y^T w (scale_r=1); reg added after the psum.
-            Gl, ul = gram_packet(Yl.T, wl, scale=1.0 / (lam * n * n),
-                                 scale_r=1.0, reg=0.0, impl=impl)
+            # One panel-free packet: Gl = Yl^T Yl / (lam n^2) plus the
+            # *unscaled* local contribution to Y^T w (scale_r=1), with
+            # Yl^T = XlT[flat, :] gathered inside the kernel; reg added after
+            # the psum.
+            Gl, ul = gram_packet_sampled(XlT, flat, wl,
+                                         scale=1.0 / (lam * n * n),
+                                         scale_r=1.0, reg=0.0, impl=impl,
+                                         **tk)
             G, u = _psum_packet(Gl, ul, axis, fuse_packet)   # THE sync point
             A = G + overlap_matrix(flat).astype(dtype) / n
             base = (u - alpha[flat] - y_rep[flat]) / n
             das = block_forward_substitution(A, base, s, b)
             alpha = alpha.at[flat].add(das)                  # Eq. (20), replicated
-            wl = wl - Yl @ das / (lam * n)                   # Eq. (19), local shard
+            # Eq. (19), local shard: wl -= Yl das / (lam n).
+            wl = wl - panel_apply(XlT, flat, das, impl=impl, **tk) / (lam * n)
             return (wl, alpha), None
 
         (wl, alpha), _ = jax.lax.scan(outer, (wl, alpha), idx_rep, unroll=unroll)
@@ -207,10 +231,12 @@ def ca_bdcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
 def bdcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
                  iters: int, key: jax.Array, *, axis: str = "shards",
                  fuse_packet: bool = False, idx: jax.Array | None = None,
-                 impl: str | None = None):
+                 impl: str | None = None,
+                 tiles: tuple[int, int] | None = None):
     """Classical distributed BDCD (Theorem 2 schedule)."""
     return ca_bdcd_sharded(mesh, X, y, lam, b, 1, iters, key, axis=axis,
-                           fuse_packet=fuse_packet, idx=idx, impl=impl)
+                           fuse_packet=fuse_packet, idx=idx, impl=impl,
+                           tiles=tiles)
 
 
 # --------------------------------------------------------------------------
@@ -220,9 +246,11 @@ def bdcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
 def lower_solver(solver, mesh: Mesh, d: int, n: int, lam: float, b: int, s: int,
                  iters: int, *, axis: str = "shards", fuse_packet: bool = True,
                  dtype=jnp.float32, col_sharded: bool = True, unroll: int = 1,
-                 impl: str | None = None):
+                 impl: str | None = None,
+                 tiles: tuple[int, int] | None = None):
     """Lower+compile a solver on abstract operands; returns the Compiled object
-    (for HLO collective counting and roofline terms).  ``impl`` is forwarded to
+    (for HLO collective counting and roofline terms).  ``impl`` and ``tiles``
+    (explicit kernel (bm, bk), overriding the autotuned pick) are forwarded to
     the solver's Gram-packet dispatch."""
     from jax.sharding import NamedSharding
     xspec = P(None, axis) if col_sharded else P(axis, None)
@@ -235,6 +263,7 @@ def lower_solver(solver, mesh: Mesh, d: int, n: int, lam: float, b: int, s: int,
     def run(Xv, yv, keyv):
         return solver(mesh, Xv, yv, lam, b, s, iters,
                       jax.random.wrap_key_data(keyv), axis=axis,
-                      fuse_packet=fuse_packet, unroll=unroll, impl=impl)
+                      fuse_packet=fuse_packet, unroll=unroll, impl=impl,
+                      tiles=tiles)
 
     return jax.jit(run).lower(X, y, key).compile()

@@ -7,6 +7,13 @@ iteration and never a materialized d x d matrix, matching the O(kdn) flops of
 Table 2.  One all-reduce per iteration in the distributed setting (the
 matvec contraction) plus two dot-product reductions -- also O(k log P)
 latency, which is the regime BCD/BDCD compete with in Figure 1c.
+
+Both panel products route through the Gram-backend dispatch layer
+(``repro.kernels.gram.normal_matvec``): jnp on the ref path, the streaming
+``panel_apply`` / ``panel_matvec`` Pallas kernels when ``impl`` explicitly
+selects the kernel backend.  ``impl=None`` keeps XLA's native dense matmul
+on every backend (including TPU) so the CG baseline the solvers are compared
+against is never silently handicapped by the row-DMA gather route.
 """
 from __future__ import annotations
 
@@ -14,6 +21,8 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.gram import normal_matvec
 
 
 class CGResult(NamedTuple):
@@ -23,12 +32,13 @@ class CGResult(NamedTuple):
 
 
 def cg_ridge(X: jax.Array, y: jax.Array, lam: float, *, tol: float = 1e-15,
-             max_iters: int = 1000, w_ref: jax.Array | None = None) -> CGResult:
+             max_iters: int = 1000, w_ref: jax.Array | None = None,
+             impl: str | None = None) -> CGResult:
     d, n = X.shape
     rhs = X @ y / n
 
     def matvec(v):
-        return X @ (X.T @ v) / n + lam * v
+        return normal_matvec(X, v, lam=lam, scale=1.0 / n, impl=impl)
 
     w0 = jnp.zeros((d,), X.dtype)
     r0 = rhs
@@ -59,13 +69,14 @@ def cg_ridge(X: jax.Array, y: jax.Array, lam: float, *, tol: float = 1e-15,
 
 
 def cg_ridge_history(X: jax.Array, y: jax.Array, lam: float, iters: int,
-                     w_ref: jax.Array | None = None) -> CGResult:
+                     w_ref: jax.Array | None = None,
+                     impl: str | None = None) -> CGResult:
     """Fixed-iteration CG that records per-iteration metrics (for Figure 1)."""
     d, n = X.shape
     rhs = X @ y / n
 
     def matvec(v):
-        return X @ (X.T @ v) / n + lam * v
+        return normal_matvec(X, v, lam=lam, scale=1.0 / n, impl=impl)
 
     def step(carry, _):
         w, r, p, rs = carry

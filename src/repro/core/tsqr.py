@@ -7,12 +7,22 @@ point in Figure 1c).  We use it to solve ridge via the stable semi-normal
 equations: QR of the regularized tall matrix A = [X^T/sqrt(n); sqrt(lam) I]
 gives R with A^T A = R^T R, then two triangular solves.  For d > n the dual
 form is used so the panel stays tall and skinny (cost min(d,n)^2 max(d,n)).
+
+``cholqr_r`` is the Gram-routed alternative: R from the Cholesky factor of
+the c x c Gram A^T A, built by the same dispatch layer
+(``repro.kernels.gram.gram``) the solvers use -- one Gram + one local
+factorization, the CholeskyQR communication pattern (also a single reduction;
+stable here because ridge always factors the lam-regularized operator).
+``tsqr_ridge(method="cholqr", impl=...)`` solves through it, so the R-factor
+Gram runs on the Pallas backend when ``impl`` selects it.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import jax.scipy.linalg as jsl
+
+from repro.kernels.gram import gram
 
 
 def _pad_rows(A: jax.Array, rows: int) -> jax.Array:
@@ -50,21 +60,42 @@ def tsqr(A: jax.Array, n_blocks: int = 8) -> jax.Array:
     return rs[0]
 
 
-def tsqr_ridge(X: jax.Array, y: jax.Array, lam: float, n_blocks: int = 8) -> jax.Array:
-    """Ridge solve via TSQR (stable implicit normal equations)."""
+def cholqr_r(A: jax.Array, *, impl: str | None = None) -> jax.Array:
+    """R factor of tall A (m >= c) via CholeskyQR: R^T R = A^T A, with the
+    Gram built by the dispatch layer (``gram(A.T)`` -- the kernel backend on
+    TPU when ``impl`` selects it).  Same single-reduction communication
+    pattern as TSQR; numerically safe on the ridge path because the operand
+    carries the sqrt(lam) regularizer rows."""
+    G = gram(A.T, impl=impl)                       # c x c = A^T A
+    return jnp.linalg.cholesky(G.astype(A.dtype)).T  # upper triangular
+
+
+def tsqr_ridge(X: jax.Array, y: jax.Array, lam: float, n_blocks: int = 8,
+               method: str = "tsqr", impl: str | None = None) -> jax.Array:
+    """Ridge solve via TSQR (stable implicit normal equations) or CholeskyQR
+    (``method="cholqr"``: the R-factor Gram routed through the Gram-backend
+    dispatch layer, ``impl`` selecting ref/pallas)."""
+    if method not in ("tsqr", "cholqr"):
+        raise ValueError(f"unknown method {method!r}; expected tsqr|cholqr")
+
+    def r_factor(A):
+        if method == "cholqr":
+            return cholqr_r(A, impl=impl)
+        return tsqr(A, n_blocks)
+
     d, n = X.shape
     sqlam = jnp.sqrt(jnp.asarray(lam, X.dtype))
     if d <= n:
         A = jnp.concatenate([X.T / jnp.sqrt(jnp.asarray(n, X.dtype)),
                              sqlam * jnp.eye(d, dtype=X.dtype)], axis=0)
-        R = tsqr(A, n_blocks)
+        R = r_factor(A)
         rhs = X @ y / n
         z = jsl.solve_triangular(R.T, rhs, lower=True)
         return jsl.solve_triangular(R, z, lower=False)
     # Dual path: w = X (X^T X / n + lam I)^{-1} y / n.
     A = jnp.concatenate([X / jnp.sqrt(jnp.asarray(n, X.dtype)),
                          sqlam * jnp.eye(n, dtype=X.dtype)], axis=0)
-    R = tsqr(A, n_blocks)
+    R = r_factor(A)
     z = jsl.solve_triangular(R.T, y, lower=True)
     z = jsl.solve_triangular(R, z, lower=False)
     return X @ z / n

@@ -16,11 +16,16 @@ TPU mapping (DESIGN.md section 2.3):
     the section Perf log.
   * the residual vector r = scale * A @ u rides along in the same pass
     (computed by the j == i grid cells against the u tile), so the packet
-    needs ONE read of A from HBM instead of two.
+    needs ONE read of A from HBM instead of two.  ``gram_pallas`` runs the
+    same body with the residual refs statically absent, for Gram-only callers
+    (``ops.gram``) -- no zeros-u is ever computed or written.
 
 VMEM budget at the default tiles (bm=128, bk=512, f32):
   2 * (128*512) * 4B (A panels) + 128*128*4B (G tile) + 512*4B (u) ~= 2.6 MiB
 well inside the ~16 MiB/core VMEM of TPU v5e.
+
+The index-prefetched sampled variant (no materialized operand panel) lives in
+``sampled_kernel.py`` and shares ``_add_diag_reg`` / ``mirror_lower``.
 """
 from __future__ import annotations
 
@@ -35,9 +40,29 @@ DEFAULT_BM = 128   # Gram tile edge (MXU-aligned)
 DEFAULT_BK = 512   # contraction tile
 
 
+def _add_diag_reg(g_ref, reg: float):
+    """Add reg*I to the (bm, bm) tile in g_ref (true-diagonal tiles only)."""
+    bm = g_ref.shape[0]
+    acc = g_ref.dtype
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 1)
+    g_ref[...] += jnp.where(rows == cols, jnp.asarray(reg, acc),
+                            jnp.asarray(0.0, acc))
+
+
+def mirror_lower(g: jax.Array, bm: int) -> jax.Array:
+    """Fill the skipped blocks strictly above the block diagonal from the
+    transpose (diagonal blocks were computed fully)."""
+    blk = jnp.arange(g.shape[0]) // bm
+    upper = blk[:, None] < blk[None, :]
+    return jnp.where(upper, g.T, g)
+
+
 def _gram_packet_kernel(a_i_ref, a_j_ref, u_ref, g_ref, r_ref, *,
                         scale: float, reg: float, scale_r: float, n_k: int,
                         symmetric_skip: bool):
+    """Shared body: ``u_ref``/``r_ref`` are None for the Gram-only variant
+    (a static, trace-time choice -- the residual ops simply don't exist)."""
     i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
     acc = g_ref.dtype
 
@@ -45,9 +70,10 @@ def _gram_packet_kernel(a_i_ref, a_j_ref, u_ref, g_ref, r_ref, *,
     def _init():
         g_ref[...] = jnp.zeros_like(g_ref)
 
-    @pl.when(jnp.logical_and(k == 0, j == 0))
-    def _init_r():
-        r_ref[...] = jnp.zeros_like(r_ref)
+    if r_ref is not None:
+        @pl.when(jnp.logical_and(k == 0, j == 0))
+        def _init_r():
+            r_ref[...] = jnp.zeros_like(r_ref)
 
     compute = jnp.logical_or(j <= i, jnp.logical_not(symmetric_skip))
 
@@ -61,22 +87,23 @@ def _gram_packet_kernel(a_i_ref, a_j_ref, u_ref, g_ref, r_ref, *,
 
     # Residual panel: each row block i accumulates A_i @ u once per k tile;
     # attach it to the j == 0 cells so it is computed exactly once.
-    @pl.when(j == 0)
-    def _residual():
-        a_i = a_i_ref[...]
-        u = u_ref[...]
-        r_ref[...] += scale_r * jax.lax.dot_general(
-            a_i, u[:, None], (((1,), (0,)), ((), ())),
-            preferred_element_type=acc)[:, 0]
+    if r_ref is not None:
+        @pl.when(j == 0)
+        def _residual():
+            a_i = a_i_ref[...]
+            u = u_ref[...]
+            r_ref[...] += scale_r * jax.lax.dot_general(
+                a_i, u[:, None], (((1,), (0,)), ((), ())),
+                preferred_element_type=acc)[:, 0]
 
     # Regularizer on the true diagonal, once, on the last k step.
     @pl.when(jnp.logical_and(k == n_k - 1, i == j))
     def _reg():
-        bm = g_ref.shape[0]
-        rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 0)
-        cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 1)
-        g_ref[...] += jnp.where(rows == cols, jnp.asarray(reg, acc),
-                                jnp.asarray(0.0, acc))
+        _add_diag_reg(g_ref, reg)
+
+
+def _gram_only_kernel(a_i_ref, a_j_ref, g_ref, **kw):
+    _gram_packet_kernel(a_i_ref, a_j_ref, None, g_ref, None, **kw)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "reg", "scale_r", "bm",
@@ -125,9 +152,40 @@ def gram_packet_pallas(A: jax.Array, u: jax.Array, *, scale: float = 1.0,
     )(A, A, u)  # A appears twice: once as the row panel, once as the column panel
 
     if symmetric_skip:
-        # Blocks strictly above the block diagonal were skipped (zeros);
-        # fill them from the transpose.  Diagonal blocks were computed fully.
-        blk = jnp.arange(m) // bm
-        upper = blk[:, None] < blk[None, :]
-        g = jnp.where(upper, g.T, g)
+        g = mirror_lower(g, bm)
     return g, r
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "reg", "bm", "bk",
+                                             "symmetric_skip", "interpret"))
+def gram_pallas(A: jax.Array, *, scale: float = 1.0, reg: float = 0.0,
+                bm: int = DEFAULT_BM, bk: int = DEFAULT_BK,
+                symmetric_skip: bool = True,
+                interpret: bool = False) -> jax.Array:
+    """G = scale*A@A^T + reg*I for A (m, n): the packet body with the
+    residual refs statically absent (ops.gram dispatches here instead of
+    zero-feeding the packet)."""
+    m, n = A.shape
+    if m % bm or n % bk:
+        raise ValueError(f"A shape {A.shape} not tiled by bm={bm}, bk={bk}")
+    n_k = n // bk
+    acc = jnp.float64 if A.dtype == jnp.float64 else jnp.float32
+
+    kernel = functools.partial(_gram_only_kernel, scale=scale, reg=reg,
+                               scale_r=1.0, n_k=n_k,
+                               symmetric_skip=symmetric_skip)
+    g = pl.pallas_call(
+        kernel,
+        grid=(m // bm, m // bm, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # A row panel
+            pl.BlockSpec((bm, bk), lambda i, j, k: (j, k)),   # A col panel
+        ],
+        out_specs=pl.BlockSpec((bm, bm), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, m), acc),
+        interpret=interpret,
+    )(A, A)
+
+    if symmetric_skip:
+        g = mirror_lower(g, bm)
+    return g

@@ -1,24 +1,45 @@
 """Public ops for the Gram packet: pad-to-tile, backend dispatch, unpad.
 
-``gram_packet(A, u)`` is the Gram-backend dispatch layer: every Gram + residual
-pair in the solvers goes through it -- the ``Y @ Y.T`` / ``Xb @ Xb.T`` products
-in ``repro.core.bcd`` / ``repro.core.bdcd`` and the local (Gl, rl)
-contributions inside ``shard_map`` in ``repro.core.distributed`` (re-exported
-as ``repro.core.gram_packet``).  On TPU it runs the Pallas kernel; everywhere
-else (this CPU container, and inside the dry-run lowering) it uses the jnp
-reference, which XLA fuses well.  ``impl`` can force either path; tests force
-``impl="pallas_interpret"`` to execute the kernel body on CPU and assert
-solver-level equivalence against ``impl="ref"``.
+This is the Gram-backend dispatch layer: every Gram-shaped product in the
+solvers goes through it (re-exported as ``repro.core.gram_packet`` etc.).  On
+TPU it runs the Pallas kernels; everywhere else (this CPU container, and
+inside the dry-run lowering) it uses the jnp reference, which XLA fuses well.
+``impl`` can force either path; tests force ``impl="pallas_interpret"`` to
+execute the kernel bodies on CPU and assert solver-level equivalence against
+``impl="ref"``.
+
+Entry points:
+
+* ``gram_packet(A, u)`` -- fused (G, r) on a pre-materialized operand (kept
+  for callers that already hold the panel, e.g. TSQR's stacked R factors).
+* ``gram_packet_sampled(X, flat, u)`` -- the panel-free hot path: same packet
+  for ``Y = X[flat, :]`` without materializing Y.  The Pallas backend
+  scalar-prefetches ``flat`` and DMA-gathers rows of X from HBM inside the
+  kernel (``sampled_kernel.py``); the ref backend gathers with jnp.  All four
+  solvers and both sharded variants build their packets here.
+* ``panel_apply(X, flat, v)`` / ``panel_matvec(X, flat, t)`` -- the deferred
+  vector updates (``alpha += Y^T dws``, ``wl -= Yl das``) and the row-side
+  matvec, also panel-free.
+* ``gram(A)`` -- Gram only, dispatched to a residual-free kernel (the packet
+  kernel is never fed a zeros u).
+* ``normal_matvec(X, v)`` -- the CG normal-equations operator
+  ``scale * X X^T v + lam v`` as two streaming panel products.
+
+Tile sizes: callers may pin ``bm``/``bk``; otherwise ``tuning.pick_tiles``
+consults the autotuned (sb, n, dtype) table populated by
+``benchmarks/gram_autotune.py`` and falls back to the 128/512 heuristic.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
-from . import ref
-from .gram_kernel import DEFAULT_BK, DEFAULT_BM, gram_packet_pallas
+from . import ref, tuning
+from .gram_kernel import gram_packet_pallas, gram_pallas
+from .sampled_kernel import (gram_packet_sampled_pallas, panel_apply_pallas,
+                             panel_matvec_pallas)
+
+_IMPLS = ("ref", "pallas", "pallas_interpret")
 
 
 def _pad_axis(x: jax.Array, mult: int, axis: int) -> jax.Array:
@@ -34,16 +55,33 @@ def _auto_impl() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
+def _check_impl(impl: str) -> None:
+    if impl not in ("pallas", "pallas_interpret"):
+        raise ValueError(
+            f"unknown gram impl {impl!r}; expected one of {_IMPLS}")
+
+
+def _tiles(m: int, n: int, dtype, bm: int | None, bk: int | None
+           ) -> tuple[int, int]:
+    """Resolve (bm, bk): explicit values win, else the autotuning table; both
+    are clamped so tiles never exceed the padded operand."""
+    auto_bm, auto_bk = tuning.pick_tiles(m, n, dtype)
+    bm_eff = min(bm, _round_up(m, tuning.ROW_GRANULE)) if bm else auto_bm
+    bk_eff = min(bk, _round_up(n, tuning.LANE_GRANULE)) if bk else auto_bk
+    return bm_eff, bk_eff
+
+
 def gram_packet(A: jax.Array, u: jax.Array, *, scale: float = 1.0,
                 reg: float = 0.0, scale_r: float | None = None,
                 impl: str | None = None,
-                bm: int = DEFAULT_BM, bk: int = DEFAULT_BK,
+                bm: int | None = None, bk: int | None = None,
                 symmetric_skip: bool = True) -> tuple[jax.Array, jax.Array]:
     """Fused (G, r) = (scale*A@A^T + reg*I, scale_r*A@u); A (m, n), u (n,).
 
     ``scale_r`` defaults to ``scale``.  ``impl`` is one of ``"ref"`` (jnp,
     XLA-fused), ``"pallas"`` (TPU kernel), ``"pallas_interpret"`` (kernel body
     executed on CPU, the test path); ``None`` auto-selects per backend.
+    ``bm``/``bk`` default to the tuning-table pick for (m, n, dtype).
 
     Zero padding is exact: padded k-columns contribute 0 to both products and
     padded m-rows are sliced off (their diagonal reg never leaves the pad).
@@ -51,14 +89,9 @@ def gram_packet(A: jax.Array, u: jax.Array, *, scale: float = 1.0,
     impl = impl or _auto_impl()
     if impl == "ref":
         return ref.gram_packet_ref(A, u, scale, reg, scale_r)
-    if impl not in ("pallas", "pallas_interpret"):
-        raise ValueError(
-            f"unknown gram impl {impl!r}; expected one of "
-            "('ref', 'pallas', 'pallas_interpret')")
+    _check_impl(impl)
     m, n = A.shape
-    # Pick tile sizes that do not exceed the (padded) operand.
-    bm_eff = min(bm, _round_up(m, 8))
-    bk_eff = min(bk, _round_up(n, 128))
+    bm_eff, bk_eff = _tiles(m, n, A.dtype, bm, bk)
     Ap = _pad_axis(_pad_axis(A, bm_eff, 0), bk_eff, 1)
     up = _pad_axis(u, bk_eff, 0)
     G, r = gram_packet_pallas(
@@ -68,15 +101,122 @@ def gram_packet(A: jax.Array, u: jax.Array, *, scale: float = 1.0,
     return G[:m, :m], r[:m]
 
 
+def gram_packet_sampled(X: jax.Array, flat: jax.Array, u: jax.Array, *,
+                        scale: float = 1.0, reg: float = 0.0,
+                        scale_r: float | None = None, impl: str | None = None,
+                        bm: int | None = None, bk: int | None = None,
+                        symmetric_skip: bool = True
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Panel-free packet: (G, r) = (scale*Y Y^T + reg*I, scale_r*Y u) for
+    Y = X[flat, :] *without materializing Y*.  X (d, n), flat (m,) int
+    indices into X's rows (duplicates allowed), u (n,).
+
+    The Pallas backend scalar-prefetches ``flat`` and streams the sampled
+    rows HBM->VMEM inside the kernel, so the sb x n panel never crosses HBM
+    as a separate array.  Padding is exact: padded k-columns of X are zero,
+    and padded index slots (clamped to row 0) only touch G/r rows >= m, which
+    are sliced off before the regularized diagonal can leak.
+    """
+    impl = impl or _auto_impl()
+    if impl == "ref":
+        return ref.gram_packet_sampled_ref(X, flat, u, scale, reg, scale_r)
+    _check_impl(impl)
+    m = flat.shape[0]
+    n = X.shape[1]
+    bm_eff, bk_eff = _tiles(m, n, X.dtype, bm, bk)
+    # X's column pad is loop-invariant in the solvers' scans (X never changes
+    # across iterations), so XLA hoists it out of the hot loop.
+    Xp = _pad_axis(X, bk_eff, 1)
+    up = _pad_axis(u, bk_eff, 0)
+    flat_p = _pad_axis(flat.astype(jnp.int32), bm_eff, 0)
+    G, r = gram_packet_sampled_pallas(
+        Xp, flat_p, up, scale=scale, reg=reg, scale_r=scale_r, bm=bm_eff,
+        bk=bk_eff, symmetric_skip=symmetric_skip,
+        interpret=(impl == "pallas_interpret"))
+    return G[:m, :m], r[:m]
+
+
+def panel_apply(X: jax.Array, flat: jax.Array, v: jax.Array, *,
+                scale: float = 1.0, impl: str | None = None,
+                bm: int | None = None, bk: int | None = None) -> jax.Array:
+    """out(n) = scale * X[flat, :]^T v, panel-free: the deferred vector
+    updates (``alpha += Y^T dws``; with X pre-transposed, ``wl -= Yl das``).
+    Padded index slots carry v == 0, so their gathered rows contribute 0."""
+    impl = impl or _auto_impl()
+    if impl == "ref":
+        return ref.panel_apply_ref(X, flat, v, scale)
+    _check_impl(impl)
+    m = flat.shape[0]
+    n = X.shape[1]
+    bm_eff, bk_eff = _tiles(m, n, X.dtype, bm, bk)
+    Xp = _pad_axis(X, bk_eff, 1)
+    flat_p = _pad_axis(flat.astype(jnp.int32), bm_eff, 0)
+    vp = _pad_axis(v, bm_eff, 0)
+    out = panel_apply_pallas(Xp, flat_p, vp, scale=scale, bm=bm_eff,
+                             bk=bk_eff, interpret=(impl == "pallas_interpret"))
+    return out[:n]
+
+
+def panel_matvec(X: jax.Array, flat: jax.Array, t: jax.Array, *,
+                 scale: float = 1.0, impl: str | None = None,
+                 bm: int | None = None, bk: int | None = None) -> jax.Array:
+    """out(m) = scale * X[flat, :] t, panel-free (the residual direction)."""
+    impl = impl or _auto_impl()
+    if impl == "ref":
+        return ref.panel_matvec_ref(X, flat, t, scale)
+    _check_impl(impl)
+    m = flat.shape[0]
+    n = X.shape[1]
+    bm_eff, bk_eff = _tiles(m, n, X.dtype, bm, bk)
+    Xp = _pad_axis(X, bk_eff, 1)
+    tp = _pad_axis(t, bk_eff, 0)
+    flat_p = _pad_axis(flat.astype(jnp.int32), bm_eff, 0)
+    out = panel_matvec_pallas(Xp, flat_p, tp, scale=scale, bm=bm_eff,
+                              bk=bk_eff,
+                              interpret=(impl == "pallas_interpret"))
+    return out[:m]
+
+
+def normal_matvec(X: jax.Array, v: jax.Array, *, lam: float = 0.0,
+                  scale: float = 1.0, impl: str | None = None,
+                  bm: int | None = None, bk: int | None = None) -> jax.Array:
+    """(scale * X X^T + lam I) v as two streaming panel products -- the CG
+    normal-equations operator (``core/krylov.py``), never a d x d matrix.
+
+    Unlike the sampled packets, ``impl=None`` stays on the ref path on every
+    backend: this is a dense matvec, which XLA's native matmul already
+    schedules well on TPU, and routing it through the identity-index row-DMA
+    kernels by default would handicap the CG baseline the solvers are
+    compared against.  The kernel route is opt-in via an explicit ``impl``.
+    """
+    impl = impl or "ref"
+    if impl == "ref":
+        return X @ (X.T @ v) * scale + lam * v
+    _check_impl(impl)
+    d = X.shape[0]
+    rows = jnp.arange(d, dtype=jnp.int32)
+    t = panel_apply(X, rows, v, impl=impl, bm=bm, bk=bk)          # X^T v
+    out = panel_matvec(X, rows, t.astype(X.dtype), scale=scale, impl=impl,
+                       bm=bm, bk=bk)                              # X (X^T v)
+    return out + lam * v
+
+
 def gram(A: jax.Array, *, scale: float = 1.0, reg: float = 0.0,
-         impl: str | None = None, **kw) -> jax.Array:
-    """G = scale * A @ A^T + reg * I (Gram only; u path fed zeros)."""
+         impl: str | None = None, bm: int | None = None,
+         bk: int | None = None, symmetric_skip: bool = True) -> jax.Array:
+    """G = scale * A @ A^T + reg * I, via the residual-free Gram kernel (the
+    packet kernel's u path is never fed, computed, or written)."""
     impl = impl or _auto_impl()
     if impl == "ref":
         return ref.gram_ref(A, scale, reg)
-    G, _ = gram_packet(A, jnp.zeros((A.shape[1],), A.dtype), scale=scale,
-                       reg=reg, impl=impl, **kw)
-    return G
+    _check_impl(impl)
+    m, n = A.shape
+    bm_eff, bk_eff = _tiles(m, n, A.dtype, bm, bk)
+    Ap = _pad_axis(_pad_axis(A, bm_eff, 0), bk_eff, 1)
+    G = gram_pallas(Ap, scale=scale, reg=reg, bm=bm_eff, bk=bk_eff,
+                    symmetric_skip=symmetric_skip,
+                    interpret=(impl == "pallas_interpret"))
+    return G[:m, :m]
 
 
 def _round_up(x: int, mult: int) -> int:

@@ -30,3 +30,32 @@ def gram_packet_ref(A: jax.Array, u: jax.Array, scale: float = 1.0,
     G = gram_ref(A, scale, reg)
     r = sr * jnp.einsum("ik,k->i", A, u, preferred_element_type=acc)
     return G, r.astype(acc)
+
+
+def gram_packet_sampled_ref(X: jax.Array, flat: jax.Array, u: jax.Array,
+                            scale: float = 1.0, reg: float = 0.0,
+                            scale_r: float | None = None
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Sampled packet oracle: ``gram_packet_ref(X[flat, :], u)``.  The gather
+    is internal to the backend -- the solvers never materialize the panel --
+    and XLA fuses it into the contraction on the ref path."""
+    return gram_packet_ref(X[flat, :], u, scale, reg, scale_r)
+
+
+def panel_apply_ref(X: jax.Array, flat: jax.Array, v: jax.Array,
+                    scale: float = 1.0) -> jax.Array:
+    """out(n) = scale * X[flat, :]^T v -- the deferred vector updates
+    (``alpha += Y^T dws`` / ``wl -= Yl das``) from X + indices."""
+    acc = jnp.float32 if X.dtype != jnp.float64 else jnp.float64
+    out = scale * jnp.einsum("mk,m->k", X[flat, :], v,
+                             preferred_element_type=acc)
+    return out.astype(acc)
+
+
+def panel_matvec_ref(X: jax.Array, flat: jax.Array, t: jax.Array,
+                     scale: float = 1.0) -> jax.Array:
+    """out(m) = scale * X[flat, :] t (the residual direction)."""
+    acc = jnp.float32 if X.dtype != jnp.float64 else jnp.float64
+    out = scale * jnp.einsum("mk,k->m", X[flat, :], t,
+                             preferred_element_type=acc)
+    return out.astype(acc)

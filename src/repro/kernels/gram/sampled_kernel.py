@@ -1,0 +1,292 @@
+"""Index-prefetched Pallas kernels for the panel-free sampled-Gram hot path.
+
+PR 1 wired the solvers' Gram + residual pairs through ``gram_packet``, but the
+solvers still materialized the sampled panel ``Y = X[flat, :]`` in HBM before
+the kernel ran.  That panel crosses HBM three times per outer iteration --
+gather write, Gram read, and the deferred ``alpha += Y^T dws`` read -- even
+though the sb x sb Gram is the only compute that matters.  The kernels here
+erase the panel entirely:
+
+* ``gram_packet_sampled_pallas``: the sb block indices are *scalar-prefetched*
+  into SMEM (``pltpu.PrefetchScalarGridSpec``), X stays un-blocked in HBM
+  (``TPUMemorySpace.ANY``), and each grid cell DMA-gathers exactly the bm
+  sampled rows x bk contraction columns it needs into VMEM scratch before
+  feeding the MXU.  Same fused output as ``gram_packet_pallas``:
+  ``(G = scale*Y Y^T + reg*I, r = scale_r*Y u)``.
+* ``panel_apply_pallas``: the deferred vector updates (``alpha += Y^T dws`` /
+  ``wl -= Yl @ das``) computed straight from X + indices -- the transpose-side
+  companion, ``out(n) = scale * X[flat, :]^T v``.
+* ``panel_matvec_pallas``: the row-side companion ``out(m) = scale *
+  X[flat, :] t`` (with ``flat = arange`` this is a streaming matvec; the CG
+  normal-equations route in ``core/krylov.py`` uses it through the dispatch
+  layer).
+
+HBM traffic per outer iteration (words, panel of sb x n, B = m/bm row
+blocks; both Gram kernels stream their operand tiles once per grid cell, so
+the B-fold Gram read is common to both schedules):
+  materialized baseline: read X rows (gather) + write panel + B x read
+  panel (Gram) + read panel (apply)      ~= (B + 3) sb n
+  panel-free (these kernels): B x read X rows (Gram) + read X rows (apply)
+                                          ~= (B + 1) sb n
+i.e. the gather write and two of the three panel re-reads vanish -- a ~2x
+traffic cut at the solvers' operating points, where sb <= bm keeps B = 1
+(`repro.core.cost_model.packet_hbm_bytes` carries the model; the ratio is
+recorded in the bench smoke baseline).
+
+Per-cell DMA shape: bm row copies of bk elements each, issued back-to-back on
+a per-row semaphore array and then drained, so the gather overlaps its own
+issue latency.  At the default (bm=128, bk=512, f32) tiles each copy is 2 KiB
+-- large enough to amortize DMA setup on TPU v5e -- and VMEM holds
+2*(128*512)*4B of gathered panels + the 128x128 G tile ~= 2.6 MiB.
+
+Grid layout matches ``gram_kernel``: grid = (m/bm, m/bm, n/bk) with k
+innermost so each (i, j) G tile stays resident across the contraction;
+symmetric skip zero-fills j > i cells and the wrapper mirrors the lower
+triangle.  Requires m % bm == 0 and n % bk == 0 (ops.py pads; padded index
+slots point at row 0 and their G/r rows are sliced off, padded k columns are
+zero so they contribute nothing).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .gram_kernel import _add_diag_reg, mirror_lower
+
+
+def _gather_rows(idx_ref, x_ref, dst, sems, base, k, bm: int, bk: int):
+    """DMA rows ``X[idx_ref[base + r], k*bk : (k+1)*bk] -> dst[r]`` for
+    r < bm: start all copies on per-row semaphores, then drain them, so the
+    row DMAs are in flight concurrently."""
+
+    def _copy(r):
+        row = idx_ref[base + r]
+        return pltpu.make_async_copy(
+            x_ref.at[row, pl.ds(k * bk, bk)], dst.at[r], sems.at[r])
+
+    def _start(r, _):
+        _copy(r).start()
+        return 0
+
+    def _wait(r, _):
+        _copy(r).wait()
+        return 0
+
+    jax.lax.fori_loop(0, bm, _start, 0)
+    jax.lax.fori_loop(0, bm, _wait, 0)
+
+
+def _sampled_packet_kernel(idx_ref, x_ref, u_ref, g_ref, r_ref, yi, yj,
+                           sem_i, sem_j, *, scale: float, reg: float,
+                           scale_r: float, n_k: int, bm: int, bk: int,
+                           symmetric_skip: bool):
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    acc = g_ref.dtype
+
+    @pl.when(k == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    @pl.when(jnp.logical_and(k == 0, j == 0))
+    def _init_r():
+        r_ref[...] = jnp.zeros_like(r_ref)
+
+    compute = jnp.logical_or(j <= i, jnp.logical_not(symmetric_skip))
+
+    # Gather the row panel (always needed when computing: j == 0 residual
+    # cells satisfy j <= i) and the column panel (only off-diagonal cells;
+    # the diagonal reuses the row gather).
+    @pl.when(compute)
+    def _gather_i():
+        _gather_rows(idx_ref, x_ref, yi, sem_i, i * bm, k, bm, bk)
+
+    @pl.when(jnp.logical_and(compute, i != j))
+    def _gather_j():
+        _gather_rows(idx_ref, x_ref, yj, sem_j, j * bm, k, bm, bk)
+
+    @pl.when(compute)
+    def _accumulate():
+        a_i = yi[...]
+        a_j = jnp.where(i == j, yi[...], yj[...])
+        g_ref[...] += scale * jax.lax.dot_general(
+            a_i, a_j, (((1,), (1,)), ((), ())),
+            preferred_element_type=acc)
+
+    # Residual r = scale_r * Y u rides along on the j == 0 cells (computed
+    # exactly once per (i, k)).
+    @pl.when(j == 0)
+    def _residual():
+        u = u_ref[...]
+        r_ref[...] += scale_r * jax.lax.dot_general(
+            yi[...], u[:, None], (((1,), (0,)), ((), ())),
+            preferred_element_type=acc)[:, 0]
+
+    @pl.when(jnp.logical_and(k == n_k - 1, i == j))
+    def _reg():
+        _add_diag_reg(g_ref, reg)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "reg", "scale_r", "bm",
+                                             "bk", "symmetric_skip",
+                                             "interpret"))
+def gram_packet_sampled_pallas(X: jax.Array, flat: jax.Array, u: jax.Array, *,
+                               scale: float = 1.0, reg: float = 0.0,
+                               scale_r: float | None = None, bm: int = 128,
+                               bk: int = 512, symmetric_skip: bool = True,
+                               interpret: bool = False
+                               ) -> tuple[jax.Array, jax.Array]:
+    """(G, r) = (scale*Y Y^T + reg*I, scale_r*Y u) for Y = X[flat, :], without
+    materializing Y.  X (d, n) with n % bk == 0, flat (m,) int32 with
+    m % bm == 0, u (n,).  Accumulates f32, or f64 for f64 input (the solver
+    exactness path runs in interpret mode on CPU)."""
+    d, n = X.shape
+    m = flat.shape[0]
+    if m % bm or n % bk:
+        raise ValueError(
+            f"flat ({m},) / X {X.shape} not tiled by bm={bm}, bk={bk}")
+    n_k = n // bk
+    grid = (m // bm, m // bm, n_k)
+    acc = jnp.float64 if X.dtype == jnp.float64 else jnp.float32
+
+    kernel = functools.partial(
+        _sampled_packet_kernel, scale=scale, reg=reg,
+        scale_r=(scale if scale_r is None else scale_r), n_k=n_k, bm=bm,
+        bk=bk, symmetric_skip=symmetric_skip)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                       # flat -> SMEM, pre-grid
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),  # X in HBM
+            pl.BlockSpec((bk,), lambda i, j, k, idx: (k,)),       # u tile
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bm), lambda i, j, k, idx: (i, j)),  # G tile
+            pl.BlockSpec((bm,), lambda i, j, k, idx: (i,)),       # r tile
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, bk), X.dtype),           # gathered row panel
+            pltpu.VMEM((bm, bk), X.dtype),           # gathered col panel
+            pltpu.SemaphoreType.DMA((bm,)),
+            pltpu.SemaphoreType.DMA((bm,)),
+        ],
+    )
+    g, r = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((m, m), acc),
+            jax.ShapeDtypeStruct((m,), acc),
+        ],
+        interpret=interpret,
+    )(flat, X, u)
+
+    if symmetric_skip:
+        g = mirror_lower(g, bm)
+    return g, r
+
+
+def _panel_apply_kernel(idx_ref, x_ref, v_ref, o_ref, ybuf, sems, *,
+                        scale: float, bm: int, bk: int):
+    k, t = pl.program_id(0), pl.program_id(1)
+    acc = o_ref.dtype
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    _gather_rows(idx_ref, x_ref, ybuf, sems, t * bm, k, bm, bk)
+    o_ref[...] += scale * jax.lax.dot_general(
+        ybuf[...], v_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=acc)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bm", "bk", "interpret"))
+def panel_apply_pallas(X: jax.Array, flat: jax.Array, v: jax.Array, *,
+                       scale: float = 1.0, bm: int = 128, bk: int = 512,
+                       interpret: bool = False) -> jax.Array:
+    """out(n) = scale * X[flat, :]^T v without materializing the panel: the
+    deferred ``alpha += Y^T dws`` / ``wl -= Yl das`` updates.  Grid (n/bk,
+    m/bm) with the row tiles innermost so each output tile accumulates in
+    VMEM; padded index slots must carry v == 0 (ops.py guarantees this)."""
+    d, n = X.shape
+    m = flat.shape[0]
+    if m % bm or n % bk:
+        raise ValueError(
+            f"flat ({m},) / X {X.shape} not tiled by bm={bm}, bk={bk}")
+    acc = jnp.float64 if X.dtype == jnp.float64 else jnp.float32
+
+    kernel = functools.partial(_panel_apply_kernel, scale=scale, bm=bm, bk=bk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n // bk, m // bm),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),  # X in HBM
+            pl.BlockSpec((bm,), lambda k, t, idx: (t,)),          # v tile
+        ],
+        out_specs=pl.BlockSpec((bk,), lambda k, t, idx: (k,)),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bk), X.dtype),
+            pltpu.SemaphoreType.DMA((bm,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n,), acc),
+        interpret=interpret,
+    )(flat, X, v)
+
+
+def _panel_matvec_kernel(idx_ref, x_ref, t_ref, o_ref, ybuf, sems, *,
+                         scale: float, bm: int, bk: int):
+    i, k = pl.program_id(0), pl.program_id(1)
+    acc = o_ref.dtype
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    _gather_rows(idx_ref, x_ref, ybuf, sems, i * bm, k, bm, bk)
+    o_ref[...] += scale * jax.lax.dot_general(
+        ybuf[...], t_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=acc)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bm", "bk", "interpret"))
+def panel_matvec_pallas(X: jax.Array, flat: jax.Array, t: jax.Array, *,
+                        scale: float = 1.0, bm: int = 128, bk: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """out(m) = scale * X[flat, :] t without materializing the panel (the
+    residual direction; with flat = arange(d) a streaming X @ t)."""
+    d, n = X.shape
+    m = flat.shape[0]
+    if m % bm or n % bk:
+        raise ValueError(
+            f"flat ({m},) / X {X.shape} not tiled by bm={bm}, bk={bk}")
+    acc = jnp.float64 if X.dtype == jnp.float64 else jnp.float32
+
+    kernel = functools.partial(_panel_matvec_kernel, scale=scale, bm=bm, bk=bk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m // bm, n // bk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),  # X in HBM
+            pl.BlockSpec((bk,), lambda i, k, idx: (k,)),          # t tile
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i, k, idx: (i,)),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bk), X.dtype),
+            pltpu.SemaphoreType.DMA((bm,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m,), acc),
+        interpret=interpret,
+    )(flat, X, t)

@@ -1,0 +1,118 @@
+"""Tile-size selection for the Gram kernels: (bm, bk) per (sb, n, dtype).
+
+The static 128/512 defaults (PR 1) leave MXU utilization on the table at the
+solver's actual operating points -- small sb (s*b in the tens) against a wide
+contraction, or narrow local shards in the distributed layouts.  This module
+replaces them with a lookup table keyed on bucketed ``(sb, n, dtype)``:
+
+* ``pick_tiles(m, n, dtype)`` -- the single entry point ``ops.py`` consults
+  whenever a caller does not pin ``bm``/``bk`` explicitly.  Exact-bucket hits
+  come from ``_TABLE``; misses fall back to the PR-1 heuristic (cap at 128/512,
+  round up to the 8-row sublane / 128-lane granules), so behaviour without a
+  table entry is unchanged.
+* ``benchmarks/gram_autotune.py`` sweeps the candidate grid on the running
+  backend and emits a JSON table; ``load_table(path)`` /
+  ``register_table(mapping)`` merge it into the live table (also honoured at
+  import time via the ``REPRO_GRAM_TUNING`` env var so TPU runs can ship their
+  sweep results without code changes).
+
+Buckets are powers of two: a shape belongs to the smallest power-of-two
+bucket >= its padded size.  That keeps the table small while distinguishing
+the regimes that matter (VMEM pressure scales with bm*bk; MXU efficiency with
+how close bm is to 128).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+
+from .gram_kernel import DEFAULT_BK, DEFAULT_BM
+
+# Hardware granules: 8-row sublanes, 128-element lanes (f32; the kernel pads
+# bf16 the same way and lets Mosaic repack).
+ROW_GRANULE = 8
+LANE_GRANULE = 128
+
+# Candidate grid swept by benchmarks/gram_autotune.py.
+BM_CANDIDATES = (8, 16, 32, 64, 128)
+BK_CANDIDATES = (128, 256, 512, 1024)
+
+# Seed table from the CPU-container sweep (make bench-smoke runs the ref
+# backend, so these entries encode shape-bucketing only, not TPU timings; a
+# real-TPU sweep overwrites them via REPRO_GRAM_TUNING).  Keys are
+# (m_bucket, n_bucket, dtype_name).
+_TABLE: dict[tuple[int, int, str], tuple[int, int]] = {
+    # solver operating points: sb = s*b in the tens, n in the thousands
+    (32, 1024, "float32"): (32, 512),
+    (32, 4096, "float32"): (32, 1024),
+    (64, 4096, "float32"): (64, 512),
+    (128, 4096, "float32"): (128, 512),
+    (128, 32768, "float32"): (128, 1024),
+    (256, 32768, "float32"): (128, 1024),
+    (128, 32768, "bfloat16"): (128, 1024),
+}
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _bucket(x: int) -> int:
+    b = 1
+    while b < x:
+        b *= 2
+    return b
+
+
+def _dtype_name(dtype) -> str:
+    return jnp.dtype(dtype).name
+
+
+def pick_tiles(m: int, n: int, dtype) -> tuple[int, int]:
+    """(bm, bk) for an (m, n) Gram operand: table hit, else PR-1 heuristic.
+
+    The returned tiles never exceed the padded operand, so callers can use
+    them directly as pallas block shapes after ops.py's pad-to-tile.
+    """
+    m_pad = _round_up(max(m, 1), ROW_GRANULE)
+    n_pad = _round_up(max(n, 1), LANE_GRANULE)
+    key = (_bucket(m_pad), _bucket(n_pad), _dtype_name(dtype))
+    bm, bk = _TABLE.get(key, (DEFAULT_BM, DEFAULT_BK))
+    return min(bm, m_pad), min(bk, n_pad)
+
+
+def register_table(mapping: dict) -> None:
+    """Merge entries into the live table.  Keys may be tuples or the JSON
+    string form ``"m_bucket,n_bucket,dtype"``; values are (bm, bk)."""
+    for k, v in mapping.items():
+        if isinstance(k, str):
+            mb, nb, dt = k.split(",")
+            k = (int(mb), int(nb), dt)
+        _TABLE[tuple(k)] = (int(v[0]), int(v[1]))
+
+
+def load_table(path: str) -> int:
+    """Load a gram_autotune.py JSON table; returns #entries merged."""
+    with open(path) as f:
+        data = json.load(f)
+    table = data.get("table", data)
+    register_table(table)
+    return len(table)
+
+
+def table_snapshot() -> dict[str, tuple[int, int]]:
+    """JSON-serializable copy of the live table (for gram_autotune output)."""
+    return {f"{k[0]},{k[1]},{k[2]}": v for k, v in sorted(_TABLE.items())}
+
+
+_env_table = os.environ.get("REPRO_GRAM_TUNING")
+if _env_table:
+    # Setting the env var is an explicit opt-in: a bad path must fail loudly,
+    # not silently fall back to the built-in table.
+    if not os.path.exists(_env_table):
+        raise FileNotFoundError(
+            f"REPRO_GRAM_TUNING={_env_table!r} does not exist; run "
+            "benchmarks/gram_autotune.py to generate it or unset the var")
+    load_table(_env_table)

@@ -31,6 +31,12 @@ def test_collective_count_reduction_by_s():
     _run("collective_counts")
 
 
+def test_collective_count_pallas_lowering():
+    """One all-reduce per outer iteration on the kernel-backend lowering
+    (interpret off-TPU; the real Mosaic lowering on TPU)."""
+    _run("collective_counts_pallas")
+
+
 def test_flash_decode_seqsharded():
     _run("flash_decode")
 

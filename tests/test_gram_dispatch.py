@@ -3,18 +3,23 @@ vs ``impl="pallas_interpret"`` for all four solvers (float64), plus the
 pad/unpad path for non-tile-aligned sb and the fused-diagonal reg path.
 
 This is the wiring test for the tentpole: the solvers build every Gram +
-residual pair through ``repro.core.gram_packet``, so forcing the kernel
-backend end-to-end must reproduce the reference iterates.
+residual pair through the dispatch layer -- panel-free via
+``gram_packet_sampled`` + ``panel_apply`` since PR 2, so the solver-level
+cases below exercise the index-prefetched gather kernel end-to-end (including
+duplicate indices inside an outer block and non-tile-aligned sb/n pad/unpad),
+and forcing the kernel backend must reproduce the reference iterates.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (bcd, bdcd, ca_bcd, ca_bdcd, gram_packet,
-                        sample_blocks)
+from repro.core import (bcd, bdcd, ca_bcd, ca_bdcd, cg_ridge, cholqr_r,
+                        gram_packet, gram_packet_sampled, normal_matvec,
+                        panel_apply, panel_matvec, ridge_exact, sample_blocks,
+                        tsqr_ridge)
 from repro.data import SyntheticSpec, make_regression
-from repro.kernels.gram import gram_packet_ref
+from repro.kernels.gram import gram_packet_ref, gram_packet_sampled_ref
 
 from _x64 import x64_mode  # noqa: F401  (autouse fixture)
 
@@ -115,3 +120,132 @@ def test_unknown_impl_rejected():
     A = jnp.ones((4, 8))
     with pytest.raises(ValueError, match="unknown gram impl"):
         gram_packet(A, jnp.ones((8,)), impl="cuda")
+    with pytest.raises(ValueError, match="unknown gram impl"):
+        gram_packet_sampled(A, jnp.zeros((2,), jnp.int32), jnp.ones((8,)),
+                            impl="cuda")
+    with pytest.raises(ValueError, match="unknown gram impl"):
+        panel_apply(A, jnp.zeros((2,), jnp.int32), jnp.ones((2,)), impl="cuda")
+
+
+# --------------------------------------------------------------------------
+# Panel-free sampled path (PR 2): solver-level with duplicate indices, plus
+# direct checks of the index-prefetched kernel's pad/unpad and gather.
+# --------------------------------------------------------------------------
+
+def _dup_idx(key, n_total, b, iters):
+    """Index stream whose second inner block repeats the first, so every CA
+    outer block's flat carries exact duplicates (the overlap-matrix path) and
+    the sampled kernel must gather the same rows twice."""
+    idx = sample_blocks(key, n_total, b, iters)
+    return idx.at[1::2].set(idx[0::2])
+
+
+def test_ca_bcd_sampled_duplicate_indices(problem):
+    X, y = problem
+    idx = _dup_idx(jax.random.key(10), X.shape[0], 4, ITERS)
+    r_ref = ca_bcd(X, y, LAM, 4, 3, ITERS, None, idx=idx, impl="ref")
+    r_pi = ca_bcd(X, y, LAM, 4, 3, ITERS, None, idx=idx,
+                  impl="pallas_interpret")
+    _assert_same_iterates(r_ref, r_pi)
+
+
+def test_ca_bdcd_sampled_duplicate_indices(problem):
+    X, y = problem
+    idx = _dup_idx(jax.random.key(11), X.shape[1], 4, ITERS)
+    r_ref = ca_bdcd(X, y, LAM, 4, 3, ITERS, None, idx=idx, impl="ref")
+    r_pi = ca_bdcd(X, y, LAM, 4, 3, ITERS, None, idx=idx,
+                   impl="pallas_interpret")
+    _assert_same_iterates(r_ref, r_pi)
+
+
+def test_sampled_packet_non_tile_aligned_f64():
+    """Direct sampled-packet check on ragged (m, n): flat padded to the 8-row
+    tile, X columns padded to the 128 lane tile, sliced back -- exact in f64,
+    with duplicate and repeated-0 indices in flat."""
+    d, n = 23, 70  # n % 128 != 0
+    X = jax.random.normal(jax.random.key(12), (d, n), jnp.float64)
+    u = jax.random.normal(jax.random.key(13), (n,), jnp.float64)
+    flat = jnp.asarray([5, 5, 0, 22, 7, 7, 7, 1, 0, 19, 3, 2, 11],
+                       jnp.int32)  # m=13, m % 8 != 0
+    G1, r1 = gram_packet_sampled(X, flat, u, scale=1.0 / n, reg=0.5,
+                                 scale_r=2.0, impl="pallas_interpret")
+    G0, r0 = gram_packet_sampled_ref(X, flat, u, 1.0 / n, 0.5, 2.0)
+    assert G1.shape == (13, 13) and r1.shape == (13,)
+    np.testing.assert_allclose(G1, G0, rtol=0, atol=1e-10)
+    np.testing.assert_allclose(r1, r0, rtol=0, atol=1e-10)
+    # and against the materialized-panel packet: same numbers, no panel
+    G2, r2 = gram_packet(X[flat, :], u, scale=1.0 / n, reg=0.5, scale_r=2.0,
+                         impl="pallas_interpret")
+    np.testing.assert_allclose(G1, G2, rtol=0, atol=1e-10)
+    np.testing.assert_allclose(r1, r2, rtol=0, atol=1e-10)
+
+
+def test_panel_apply_matches_ref():
+    d, n = 31, 200
+    X = jax.random.normal(jax.random.key(14), (d, n), jnp.float64)
+    flat = jnp.asarray([3, 3, 0, 30, 8], jnp.int32)
+    v = jax.random.normal(jax.random.key(15), (5,), jnp.float64)
+    a0 = 0.7 * X[flat, :].T @ v
+    for impl in ("ref", "pallas_interpret"):
+        a1 = panel_apply(X, flat, v, scale=0.7, impl=impl)
+        np.testing.assert_allclose(a1, a0, rtol=0, atol=1e-10)
+
+
+def test_panel_matvec_matches_ref():
+    d, n = 31, 200
+    X = jax.random.normal(jax.random.key(16), (d, n), jnp.float64)
+    flat = jnp.asarray([3, 3, 0, 30, 8], jnp.int32)
+    t = jax.random.normal(jax.random.key(17), (n,), jnp.float64)
+    m0 = 1.3 * X[flat, :] @ t
+    for impl in ("ref", "pallas_interpret"):
+        m1 = panel_matvec(X, flat, t, scale=1.3, impl=impl)
+        np.testing.assert_allclose(m1, m0, rtol=0, atol=1e-10)
+
+
+# --------------------------------------------------------------------------
+# Remaining Gram-shaped hot spots routed through the dispatch layer
+# --------------------------------------------------------------------------
+
+def test_normal_matvec_impls_agree(problem):
+    X, _ = problem
+    d, n = X.shape
+    v = jax.random.normal(jax.random.key(18), (d,), jnp.float64)
+    ref = X @ (X.T @ v) / n + LAM * v
+    for impl in ("ref", "pallas_interpret"):
+        out = normal_matvec(X, v, lam=LAM, scale=1.0 / n, impl=impl)
+        np.testing.assert_allclose(out, ref, rtol=1e-12, atol=1e-12)
+
+
+def test_cg_ridge_kernel_backend(problem):
+    """CG with the normal-equations products on the kernel backend converges
+    to the same ridge solution (the krylov routing satellite)."""
+    X, y = problem
+    w_opt = ridge_exact(X, y, LAM)
+    w = cg_ridge(X, y, LAM, tol=1e-14, max_iters=500,
+                 impl="pallas_interpret").w
+    np.testing.assert_allclose(w, w_opt, rtol=1e-9, atol=1e-11)
+
+
+def test_tsqr_ridge_cholqr_gram_routed(problem):
+    """CholeskyQR path: the R-factor Gram built by the dispatch layer gives
+    the same ridge solution as Householder TSQR (both dual and primal
+    branches)."""
+    X, y = problem
+    w_opt = ridge_exact(X, y, LAM)
+    for impl in ("ref", "pallas_interpret"):
+        w = tsqr_ridge(X, y, LAM, method="cholqr", impl=impl)
+        np.testing.assert_allclose(w, w_opt, rtol=1e-8, atol=1e-10)
+    Xt = X.T
+    yt = jnp.ones((X.shape[0],), X.dtype)
+    w2 = tsqr_ridge(Xt, yt, LAM, method="cholqr", impl="pallas_interpret")
+    np.testing.assert_allclose(w2, ridge_exact(Xt, yt, LAM), rtol=1e-8,
+                               atol=1e-10)
+
+
+def test_cholqr_r_factor(problem):
+    X, _ = problem
+    A = jnp.concatenate([X.T, jnp.eye(X.shape[0], dtype=X.dtype)], axis=0)
+    for impl in ("ref", "pallas_interpret"):
+        R = cholqr_r(A, impl=impl)
+        np.testing.assert_allclose(R.T @ R, A.T @ A, rtol=1e-10, atol=1e-10)
+        np.testing.assert_allclose(R, jnp.triu(R), rtol=0, atol=0)

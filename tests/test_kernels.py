@@ -8,7 +8,9 @@ import pytest
 
 from _hyp import given, st
 
-from repro.kernels.gram import gram, gram_packet, gram_packet_ref, gram_ref
+from repro.kernels.gram import (gram, gram_packet, gram_packet_ref,
+                                gram_packet_sampled, gram_packet_sampled_ref,
+                                gram_ref, tuning)
 
 SHAPES = [(128, 512), (64, 300), (96, 1024), (8, 128), (130, 700), (256, 256)]
 DTYPES = [jnp.float32, jnp.bfloat16]
@@ -56,6 +58,61 @@ def test_gram_property_ragged_shapes(m, n, seed):
     G0, r0 = gram_packet_ref(A, u, 1.0 / n, 0.1)
     np.testing.assert_allclose(G1, G0, rtol=2e-5, atol=2e-5)
     np.testing.assert_allclose(r1, r0, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(96, 512), (40, 300), (13, 128)])
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_gram_packet_sampled_matches_ref(shape, dtype):
+    """The index-prefetched gather kernel vs the jnp oracle, including
+    out-of-order and duplicate indices and ragged (m, n)."""
+    m, n = shape
+    d = 2 * max(m, 16)
+    X = jax.random.normal(jax.random.key(10), (d, n), dtype)
+    u = jax.random.normal(jax.random.key(11), (n,), dtype)
+    flat = jax.random.randint(jax.random.key(12), (m,), 0, d, jnp.int32)
+    G1, r1 = gram_packet_sampled(X, flat, u, scale=1.0 / n, reg=0.01,
+                                 impl="pallas_interpret")
+    G0, r0 = gram_packet_sampled_ref(X, flat, u, 1.0 / n, 0.01)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(G1, G0, rtol=tol, atol=tol)
+    np.testing.assert_allclose(r1, r0, rtol=tol, atol=tol)
+
+
+def test_gram_only_kernel_skips_residual():
+    """ops.gram dispatches to the residual-free kernel and still matches the
+    packet's G (satellite: no zeros-u wasted work)."""
+    A = jax.random.normal(jax.random.key(13), (96, 384), jnp.float32)
+    G = gram(A, scale=0.5, reg=1.0, impl="pallas_interpret")
+    Gp, _ = gram_packet(A, jnp.zeros((384,), jnp.float32), scale=0.5, reg=1.0,
+                        impl="pallas_interpret")
+    np.testing.assert_allclose(G, Gp, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(G, G.T, rtol=0, atol=0)
+
+
+def test_tuning_table_pick_and_override():
+    """pick_tiles: table hits and the clamped heuristic fallback; explicit
+    (bm, bk) still wins through the dispatch layer."""
+    bm, bk = tuning.pick_tiles(13, 70, jnp.float32)
+    assert 16 % bm == 0 or bm <= 16   # never exceeds the padded operand
+    assert bk <= 128
+    assert tuning.pick_tiles(128, 32768, jnp.float32) == (128, 1024)  # table
+    A = jax.random.normal(jax.random.key(14), (24, 200), jnp.float32)
+    u = jax.random.normal(jax.random.key(15), (200,), jnp.float32)
+    G0, r0 = gram_packet(A, u, impl="pallas_interpret")           # autotuned
+    G1, r1 = gram_packet(A, u, impl="pallas_interpret", bm=8, bk=128)
+    # different tiles reorder the f32 accumulation; values agree to f32 level
+    np.testing.assert_allclose(G1, G0, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(r1, r0, rtol=2e-5, atol=2e-5)
+
+
+def test_tuning_register_and_snapshot():
+    snap = tuning.table_snapshot()
+    try:
+        tuning.register_table({"8,256,float32": (8, 256)})
+        assert tuning.pick_tiles(8, 256, jnp.float32) == (8, 256)
+    finally:
+        tuning._TABLE.clear()
+        tuning.register_table(snap)
 
 
 def test_solver_uses_kernel_consistently():
