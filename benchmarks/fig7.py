@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bdcd, ca_bdcd, ridge_exact, sample_blocks
+from repro.core import get_solver, ridge_exact, sample_blocks
 from repro.data import PAPER_DATASETS, make_regression
 
 from ._util import row
@@ -18,6 +18,7 @@ H = 400
 
 def run() -> list[str]:
     jax.config.update("jax_enable_x64", True)
+    solve = get_solver("dual", "local")     # s=1 is classical BDCD
     rows = []
     for name, spec in PAPER_DATASETS.items():
         X, y, _ = make_regression(jax.random.key(9), spec)
@@ -26,10 +27,10 @@ def run() -> list[str]:
         w_opt = ridge_exact(X, y, lam)
         b = min(BLOCK[name], n)
         idx = sample_blocks(jax.random.key(10), n, b, H)
-        base = bdcd(X, y, lam, b, H, None, idx=idx, w_ref=w_opt)
+        base = solve(X, y, lam, b, 1, H, None, idx=idx, w_ref=w_opt)
         for s in SVALS:
-            res = ca_bdcd(X, y, lam, b, s, H, None, idx=idx, w_ref=w_opt,
-                          track_cond=True)
+            res = solve(X, y, lam, b, s, H, None, idx=idx, w_ref=w_opt,
+                        track_cond=True)
             dev = np.max(np.abs(np.asarray(res.history["objective"]) -
                                 np.asarray(base.history["objective"])))
             scale = max(abs(float(base.history["objective"][-1])), 1e-300)

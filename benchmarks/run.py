@@ -79,6 +79,19 @@ def _write_smoke_baseline(rows, impl, path=SMOKE_OUT):
     print(f"# smoke baseline -> {os.path.abspath(path)}", file=sys.stderr)
 
 
+def _check_registry() -> None:
+    """The harness (and the fig/table modules it drives) selects solvers via
+    the (formulation, backend) registry; fail fast if an entry went missing
+    rather than part-way through a long sweep."""
+    from repro.core import FORMULATIONS, registered_solvers
+    from repro.core.engine import BACKENDS
+    reg = registered_solvers()
+    missing = [(f, bk) for f in FORMULATIONS for bk in BACKENDS
+               if (f, bk) not in reg]
+    if missing:
+        raise SystemExit(f"solver registry incomplete: missing {missing}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
@@ -96,6 +109,7 @@ def main() -> None:
     else:
         mods = MODULES
     impl = args.impl or ("ref" if args.smoke else None)
+    _check_registry()
     print("name,us_per_call,derived")
     rows, failures = _run_modules(mods, impl, args.smoke)
     # Only the canonical smoke set may refresh the committed baseline; a

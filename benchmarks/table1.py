@@ -20,13 +20,13 @@ _SUBPROC = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
-from repro.core import ca_bcd_sharded, ca_bdcd_sharded, count_in_compiled, make_solver_mesh
+from repro.core import count_in_compiled, make_solver_mesh
 from repro.core.distributed import lower_solver
 impl = os.environ.get("REPRO_GRAM_IMPL") or None
 mesh = make_solver_mesh(8)
 iters = 16
 for s in (1, 2, 4, 8):
-    comp = lower_solver(ca_bcd_sharded, mesh, 64, 256, 1e-3, 8, s, iters,
+    comp = lower_solver("primal", mesh, 64, 256, 1e-3, 8, s, iters,
                         fuse_packet=(s > 1), unroll=iters // s, impl=impl)
     c = count_in_compiled(comp)
     print(f"BCD s={s} count={c.count} operand={c.operand_bytes:.0f}")

@@ -21,8 +21,8 @@ def child():
     jax.config.update("jax_enable_x64", True)
     import numpy as np
 
-    from repro.core import (ca_bcd, ca_bcd_sharded, ca_bdcd, ca_bdcd_sharded,
-                            count_in_compiled, make_solver_mesh, sample_blocks)
+    from repro.core import (count_in_compiled, get_solver, make_solver_mesh,
+                            sample_blocks)
     from repro.core.distributed import lower_solver
     from repro.data import SyntheticSpec, make_regression
 
@@ -33,23 +33,26 @@ def child():
                               SyntheticSpec("dist", d=128, n=4096, cond=1e6))
     lam, b, s, iters = 1e-3, 8, 8, 64
 
+    # Both formulations x both backends come from the same solver registry.
+    primal, primal_sh = get_solver("primal"), get_solver("primal", "sharded")
+    dual, dual_sh = get_solver("dual"), get_solver("dual", "sharded")
+
     idx = sample_blocks(jax.random.key(1), 128, b, iters)
-    w_dist, _ = ca_bcd_sharded(mesh, X, y, lam, b, s, iters, None, idx=idx,
-                               impl=impl)
-    w_ref = ca_bcd(X, y, lam, b, s, iters, None, idx=idx, impl=impl).w
+    w_dist, _ = primal_sh(mesh, X, y, lam, b, s, iters, None, idx=idx,
+                          impl=impl)
+    w_ref = primal(X, y, lam, b, s, iters, None, idx=idx, impl=impl).w
     print(f"CA-BCD  1D-col: |w_dist - w_single| = "
           f"{float(np.max(np.abs(w_dist - w_ref))):.2e}")
 
     idx2 = sample_blocks(jax.random.key(2), 4096, 16, iters)
-    w2, _ = ca_bdcd_sharded(mesh, X, y, lam, 16, s, iters, None, idx=idx2,
-                            impl=impl)
-    w2_ref = ca_bdcd(X, y, lam, 16, s, iters, None, idx=idx2, impl=impl).w
+    w2, _ = dual_sh(mesh, X, y, lam, 16, s, iters, None, idx=idx2, impl=impl)
+    w2_ref = dual(X, y, lam, 16, s, iters, None, idx=idx2, impl=impl).w
     print(f"CA-BDCD 1D-row: |w_dist - w_single| = "
           f"{float(np.max(np.abs(w2 - w2_ref))):.2e}")
 
-    cl = lower_solver(ca_bcd_sharded, mesh, 128, 4096, lam, b, 1, iters,
+    cl = lower_solver("primal", mesh, 128, 4096, lam, b, 1, iters,
                       fuse_packet=True, unroll=iters, impl=impl)
-    ca = lower_solver(ca_bcd_sharded, mesh, 128, 4096, lam, b, s, iters,
+    ca = lower_solver("primal", mesh, 128, 4096, lam, b, s, iters,
                       fuse_packet=True, unroll=iters // s, impl=impl)
     n_cl, n_ca = count_in_compiled(cl).count, count_in_compiled(ca).count
     print(f"collectives per {iters} iterations: classical={n_cl}, "

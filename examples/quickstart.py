@@ -15,11 +15,13 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core import bcd, ca_bcd, ridge_exact, sample_blocks  # noqa: E402
+from repro.core import get_solver, ridge_exact, sample_blocks  # noqa: E402
 from repro.data import SyntheticSpec, make_regression  # noqa: E402
 
 
 def main(impl: str | None = None):
+    # One engine, one registry: classical BCD is the primal solver at s=1.
+    solve = get_solver("primal", "local")
     # A news20-shaped problem: more features than data points, ill-conditioned.
     X, y, _ = make_regression(jax.random.key(0),
                               SyntheticSpec("demo", d=512, n=2048, cond=1e6))
@@ -30,9 +32,10 @@ def main(impl: str | None = None):
     iters, b, s = 1000, 8, 25
     idx = sample_blocks(jax.random.key(1), X.shape[0], b, iters)
 
-    res_bcd = bcd(X, y, lam, b, iters, None, idx=idx, w_ref=w_opt, impl=impl)
-    res_ca = ca_bcd(X, y, lam, b, s, iters, None, idx=idx, w_ref=w_opt,
-                    track_cond=True, impl=impl)
+    res_bcd = solve(X, y, lam, b, 1, iters, None, idx=idx, w_ref=w_opt,
+                    impl=impl)
+    res_ca = solve(X, y, lam, b, s, iters, None, idx=idx, w_ref=w_opt,
+                   track_cond=True, impl=impl)
 
     dev = np.max(np.abs(np.asarray(res_ca.history["objective"]) -
                         np.asarray(res_bcd.history["objective"])))

@@ -2,15 +2,19 @@
 dual block coordinate descent (CA-BCD / CA-BDCD) for regularized least squares,
 plus the baselines it is compared against (CG, TSQR) and the alpha-beta-gamma
 cost model used for the modeled scaling experiments."""
-from .bcd import SolveResult, bcd, ca_bcd, objective
+from .engine import (FORMULATIONS, DualRidge, Formulation, PrimalRidge,
+                     SolveResult, SolverPlan, get_solver, register_solver,
+                     registered_solvers, s_step_solve, s_step_solve_sharded)
+from .bcd import bcd, ca_bcd, objective
 from .bdcd import bdcd, ca_bdcd
 from .direct import ridge_exact
 from .distributed import (bcd_sharded, bdcd_sharded, ca_bcd_sharded,
                           ca_bdcd_sharded, lower_solver, make_solver_mesh)
 from .hlo_analysis import (CollectiveSummary, collective_summary,
                            count_in_compiled, parse_collectives)
-from repro.kernels.gram import (gram, gram_packet, gram_packet_sampled,
-                                normal_matvec, panel_apply, panel_matvec)
+from repro.kernels.gram import (PacketPlan, gram, gram_packet,
+                                gram_packet_sampled, normal_matvec,
+                                panel_apply, panel_matvec)
 from .krylov import cg_ridge, cg_ridge_history
 from .sampling import overlap_matrix, sample_blocks, sample_blocks_balanced
 from .subproblem import block_forward_substitution, solve_spd
@@ -23,6 +27,9 @@ __all__ = [
     "cholqr_r",
     "bcd_sharded", "bdcd_sharded", "ca_bcd_sharded", "ca_bdcd_sharded",
     "lower_solver", "make_solver_mesh",
+    "SolverPlan", "PacketPlan", "Formulation", "PrimalRidge", "DualRidge",
+    "FORMULATIONS", "s_step_solve", "s_step_solve_sharded", "get_solver",
+    "register_solver", "registered_solvers",
     "gram", "gram_packet", "gram_packet_sampled", "panel_apply",
     "panel_matvec", "normal_matvec",
     "sample_blocks", "sample_blocks_balanced", "overlap_matrix",

@@ -3,11 +3,14 @@ variant CA-BCD (Algorithm 2) for the ridge problem
 
     min_w  lam/2 ||w||^2 + 1/(2n) ||X^T w - y||^2,      X in R^{d x n}.
 
-Single-device reference implementations.  The distributed (shard_map) versions
-in ``repro.core.distributed`` compute identical iterates; the equivalence is
-tested bit-for-bit.  Both classical and CA variants consume the *same*
-pre-sampled index stream, so CA-BCD(s) reproduces BCD's iterates exactly in
-exact arithmetic -- the paper's central claim (tested in float64).
+Since PR 3 these are thin wrappers over the shared s-step engine
+(``repro.core.engine``): classical BCD is the engine at ``s=1``, CA-BCD(s) the
+same scan at ``s>1``, and the distributed versions in
+``repro.core.distributed`` are the identical driver wrapped in shard_map.
+Both variants consume the *same* pre-sampled index stream, so CA-BCD(s)
+reproduces BCD's iterates exactly in exact arithmetic -- the paper's central
+claim (tested in float64).  ``iters`` need not be a multiple of ``s``: the
+engine runs a ragged final outer iteration over the remainder.
 
 Key identity used throughout (DESIGN.md section 1): the CA inner loop is a block
 forward substitution against
@@ -17,32 +20,21 @@ forward substitution against
 whose diagonal blocks are the per-iteration Gamma_{sk+j} and whose strictly
 lower blocks carry both correction sums of Eq. (8).
 
-Data flow (panel-free since PR 2): the hot loops never materialize the sampled
+Data flow (panel-free since PR 2): the hot loop never materializes the sampled
 panel ``Y = X[flat, :]``.  The sb x sb packet comes straight from (X, flat)
 via ``gram_packet_sampled`` -- on TPU the kernel scalar-prefetches the block
 indices and DMA-gathers the sampled rows HBM->VMEM -- and the deferred vector
 updates (Eqs. 5/10, ``alpha += Y^T dws``) are computed from the same (X, flat)
-pair by ``panel_apply``.  The panel's three HBM crossings per outer iteration
-(gather write, Gram read, apply read) drop to zero; only the sampled rows of X
-are read, once per consumer (see ``repro.core.cost_model.packet_hbm_bytes``).
+pair by ``panel_apply`` (see ``repro.core.cost_model.packet_hbm_bytes``).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
-
 import jax
-import jax.numpy as jnp
 
-from repro.kernels.gram import gram_packet_sampled, panel_apply
+from .engine import (PrimalRidge, SolveResult, SolverPlan, register_solver,
+                     s_step_solve)
 
-from .sampling import overlap_matrix, sample_blocks
-from .subproblem import block_forward_substitution, solve_spd
-
-
-class SolveResult(NamedTuple):
-    w: jax.Array          # (d,) primal iterate
-    alpha: jax.Array      # (n,) residual-form auxiliary alpha = X^T w
-    history: dict         # metric name -> (iters,) array (per inner iteration)
+PRIMAL = PrimalRidge()
 
 
 def objective(X: jax.Array, w: jax.Array, y: jax.Array, lam: float) -> jax.Array:
@@ -52,59 +44,20 @@ def objective(X: jax.Array, w: jax.Array, y: jax.Array, lam: float) -> jax.Array
     return 0.5 / n * (r @ r) + 0.5 * lam * (w @ w)
 
 
-def _objective_from_alpha(alpha, w, y, lam):
-    # alpha == X^T w is maintained by the residual-form recurrence, so the
-    # objective costs O(n + d) per iteration instead of O(dn).
-    n = alpha.shape[0]
-    r = alpha - y
-    return 0.5 / n * (r @ r) + 0.5 * lam * (w @ w)
-
-
-def _metrics(alpha, w, y, lam, w_ref):
-    m = {"objective": _objective_from_alpha(alpha, w, y, lam)}
-    if w_ref is not None:
-        m["sol_err"] = jnp.linalg.norm(w - w_ref) / jnp.linalg.norm(w_ref)
-    return m
-
-
-def _tile_kw(tiles):
-    if tiles is None:
-        return {}
-    return {"bm": tiles[0], "bk": tiles[1]}
-
-
 def bcd(X: jax.Array, y: jax.Array, lam: float, b: int, iters: int,
         key: jax.Array, *, w0: jax.Array | None = None,
         idx: jax.Array | None = None, w_ref: jax.Array | None = None,
         impl: str | None = None,
         tiles: tuple[int, int] | None = None) -> SolveResult:
-    """Classical BCD, Algorithm 1 (residual form).  One Gram + one subproblem
-    per iteration; in the distributed setting this is one synchronization per
-    iteration, which is what the CA variant removes.  ``impl`` selects the
-    Gram-packet backend (``repro.core.gram_packet``); ``tiles`` pins the
-    kernel's (bm, bk) instead of the autotuned pick."""
-    d, n = X.shape
-    if idx is None:
-        idx = sample_blocks(key, d, b, iters)
-    w = jnp.zeros((d,), X.dtype) if w0 is None else w0
-    alpha = X.T @ w if w0 is not None else jnp.zeros((n,), X.dtype)
-    tk = _tile_kw(tiles)
-
-    def step(carry, idx_h):
-        w, alpha = carry
-        # One fused panel-free packet: Gamma = Xb Xb^T / n + lam I and the
-        # residual contribution Xb (y - alpha) / n of the Eq. (7) rhs, with
-        # Xb = X[idx_h, :] gathered inside the kernel.
-        Gamma, r_x = gram_packet_sampled(X, idx_h, y - alpha, scale=1.0 / n,
-                                         reg=lam, impl=impl, **tk)
-        r = r_x - lam * w[idx_h]                           # Eq. (7) rhs
-        dw = solve_spd(Gamma, r)
-        w = w.at[idx_h].add(dw)
-        alpha = alpha + panel_apply(X, idx_h, dw, impl=impl, **tk)  # Eq. (5)
-        return (w, alpha), _metrics(alpha, w, y, lam, w_ref)
-
-    (w, alpha), hist = jax.lax.scan(step, (w, alpha), idx)
-    return SolveResult(w, alpha, hist)
+    """Classical BCD, Algorithm 1 (residual form): the s-step engine at s=1.
+    One Gram + one subproblem per iteration; in the distributed setting this
+    is one synchronization per iteration, which is what the CA variant
+    removes.  ``impl`` selects the Gram-packet backend
+    (``repro.core.gram_packet``); ``tiles`` pins the kernel's (bm, bk)
+    instead of the autotuned pick."""
+    plan = SolverPlan(b=b, s=1, impl=impl, tiles=tiles)
+    return s_step_solve(PRIMAL, plan, X, y, lam, iters, key, x0=w0, idx=idx,
+                        w_ref=w_ref)
 
 
 def ca_bcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int, iters: int,
@@ -112,9 +65,10 @@ def ca_bcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int, iters: int,
            idx: jax.Array | None = None, w_ref: jax.Array | None = None,
            track_cond: bool = False, impl: str | None = None,
            tiles: tuple[int, int] | None = None) -> SolveResult:
-    """CA-BCD, Algorithm 2.  ``iters`` counts *inner* iterations; must be a
-    multiple of ``s``.  Consumes the same index stream as :func:`bcd` (same
-    ``key`` => identical iterates in exact arithmetic).
+    """CA-BCD, Algorithm 2: the s-step engine at s>1.  ``iters`` counts
+    *inner* iterations; a non-multiple of ``s`` runs a ragged final outer
+    iteration.  Consumes the same index stream as :func:`bcd` (same ``key``
+    => identical iterates in exact arithmetic).
 
     Per outer iteration: ONE sb x sb Gram packet (the only communication in
     the distributed version; built panel-free from (X, flat) by the
@@ -122,50 +76,10 @@ def ca_bcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int, iters: int,
     then ``s`` local solves via block forward substitution, then deferred
     vector updates (Eqs. 9-10) from the same (X, flat) pair.
     """
-    d, n = X.shape
-    if iters % s != 0:
-        raise ValueError(f"iters={iters} must be a multiple of s={s}")
-    if idx is None:
-        idx = sample_blocks(key, d, b, iters)
-    idx = idx.reshape(iters // s, s, b)
-    w = jnp.zeros((d,), X.dtype) if w0 is None else w0
-    alpha = X.T @ w if w0 is not None else jnp.zeros((n,), X.dtype)
-    sb = s * b
-    tk = _tile_kw(tiles)
+    plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles, track_cond=track_cond)
+    return s_step_solve(PRIMAL, plan, X, y, lam, iters, key, x0=w0, idx=idx,
+                        w_ref=w_ref)
 
-    def outer(carry, idx_k):
-        w, alpha = carry
-        flat = idx_k.reshape(sb)
-        # One fused panel-free packet: gram = Y Y^T / n + lam I (regularized
-        # diagonal inside the kernel) and r = Y (y - alpha) / n for
-        # Y = X[flat, :], gathered inside the kernel; one all-reduce in the
-        # distributed version.
-        gram, r = gram_packet_sampled(X, flat, y - alpha, scale=1.0 / n,
-                                      reg=lam, impl=impl, **tk)
-        O = overlap_matrix(flat).astype(X.dtype)           # local: shared-seed trick
-        # lam I is already on gram's diagonal; add only the off-diagonal
-        # duplicate-index overlap terms (O's diagonal is exactly 1).
-        A = gram + lam * (O - jnp.eye(sb, dtype=X.dtype))
-        base = r - lam * w[flat]                           # Eq. (8) non-correction terms
-        dws = block_forward_substitution(A, base, s, b)
 
-        # Per-inner-iteration metrics, reconstructed locally (test/bench only;
-        # the distributed fast path skips this).
-        def inner(c, j):
-            wj, aj = c
-            sl = jax.lax.dynamic_slice_in_dim
-            idx_j = sl(flat, j * b, b)
-            dw_j = sl(dws, j * b, b)
-            wj = wj.at[idx_j].add(dw_j)
-            aj = aj + panel_apply(X, idx_j, dw_j, impl=impl, **tk)
-            return (wj, aj), _metrics(aj, wj, y, lam, w_ref)
-
-        (w, alpha), hist = jax.lax.scan(inner, (w, alpha), jnp.arange(s))
-        if track_cond:
-            # gram already carries the lam-regularized diagonal (packet reg).
-            hist["gram_cond"] = jnp.full((s,), jnp.linalg.cond(gram))
-        return (w, alpha), hist
-
-    (w, alpha), hist = jax.lax.scan(outer, (w, alpha), idx)
-    hist = {k: v.reshape(iters, *v.shape[2:]) for k, v in hist.items()}
-    return SolveResult(w, alpha, hist)
+# ca_bcd at s=1 is classical bcd, so it is the canonical registry entry.
+register_solver("primal", "local", ca_bcd)

@@ -7,6 +7,11 @@ Solves the dual problem
 with the primal iterate maintained through w = -X alpha / (lam n).  With
 b' = 1 this is SDCA with the least-squares loss (paper section 3.2).
 
+Since PR 3 these are thin wrappers over the shared s-step engine: the dual is
+a :class:`~repro.core.engine.Formulation` (``DualRidge``) plugged into the
+same scan that runs the primal -- same driver, same ragged-tail handling,
+same distributed backend.
+
 CA identity: the inner loop is block forward substitution against
 
     A = Y^T Y / (lam n^2) + O / n,   Y = X[:, flat_idx],  O = overlap(flat_idx)
@@ -15,8 +20,8 @@ with base_j = (1/n) (Y_j^T w_sk - alpha_sk[idx_j] - y[idx_j]); diagonal blocks
 of A are the Theta_{sk+j} of Eq. (18).
 
 Data flow (panel-free since PR 2): the dual samples *columns* of X, so the
-solvers hold ``XT = X.T`` -- materialized once, outside the hot loop -- and
-the sampled Gram ``Y^T Y = XT[flat, :] XT[flat, :]^T`` comes straight from
+formulation holds ``XT = X.T`` -- materialized once, outside the hot loop --
+and the sampled Gram ``Y^T Y = XT[flat, :] XT[flat, :]^T`` comes straight from
 (XT, flat) via ``gram_packet_sampled`` without ever forming the (d, sb)
 panel.  The deferred primal updates (Eq. 15/19, ``w -= Y das / (lam n)``) use
 ``panel_apply(XT, flat, das)`` == ``X[:, flat] @ das`` from the same pair.
@@ -32,13 +37,11 @@ second copy is a ROADMAP open item.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from repro.kernels.gram import gram_packet_sampled, panel_apply
+from .engine import (DualRidge, SolveResult, SolverPlan, register_solver,
+                     s_step_solve)
 
-from .bcd import SolveResult, _metrics, _tile_kw
-from .sampling import overlap_matrix, sample_blocks
-from .subproblem import block_forward_substitution, solve_spd
+DUAL = DualRidge()
 
 
 def bdcd(X: jax.Array, y: jax.Array, lam: float, b: int, iters: int,
@@ -46,47 +49,12 @@ def bdcd(X: jax.Array, y: jax.Array, lam: float, b: int, iters: int,
          idx: jax.Array | None = None, w_ref: jax.Array | None = None,
          impl: str | None = None,
          tiles: tuple[int, int] | None = None) -> SolveResult:
-    """Classical BDCD, Algorithm 3.  ``b`` is the paper's b'.  ``impl``
-    selects the Gram-packet backend (``repro.core.gram_packet``)."""
-    d, n = X.shape
-    if idx is None:
-        idx = sample_blocks(key, n, b, iters)
-    alpha = jnp.zeros((n,), X.dtype) if alpha0 is None else alpha0
-    w = -X @ alpha / (lam * n)
-    XT = X.T           # once, outside the hot loop (columns become rows)
-    tk = _tile_kw(tiles)
-
-    def step(carry, idx_h):
-        w, alpha = carry
-        # One fused panel-free packet: Theta = Xc^T Xc / (lam n^2) + I/n
-        # (regularized diagonal fused) and the raw projection Xc^T w
-        # (scale_r=1), with Xc^T = XT[idx_h, :] gathered inside the kernel.
-        Theta, u = gram_packet_sampled(XT, idx_h, w, scale=1.0 / (lam * n * n),
-                                       scale_r=1.0, reg=1.0 / n, impl=impl,
-                                       **tk)
-        rhs = (u - alpha[idx_h] - y[idx_h]) / n            # Eq. (17)
-        da = solve_spd(Theta, rhs)
-        alpha = alpha.at[idx_h].add(da)
-        # Eq. (15): w -= Xc @ da / (lam n) == XT[idx_h, :]^T da / (lam n).
-        w = w - panel_apply(XT, idx_h, da, impl=impl, **tk) / (lam * n)
-        return (w, alpha), _metrics_dual(X, alpha, w, y, lam, w_ref)
-
-    (w, alpha), hist = jax.lax.scan(step, (w, alpha), idx)
-    return SolveResult(w, alpha, hist)
-
-
-def _metrics_dual(X, alpha, w, y, lam, w_ref):
-    # Primal objective evaluated at the dual-generated primal iterate w.
-    # X^T w is O(dn); we instead track it through the cheap surrogate
-    # ||alpha + y|| terms when benchmarking large problems, but for the paper
-    # figures (small d,n) the exact primal objective is affordable and matches
-    # the paper's plots.
-    n = alpha.shape[0]
-    r = X.T @ w - y
-    m = {"objective": 0.5 / n * (r @ r) + 0.5 * lam * (w @ w)}
-    if w_ref is not None:
-        m["sol_err"] = jnp.linalg.norm(w - w_ref) / jnp.linalg.norm(w_ref)
-    return m
+    """Classical BDCD, Algorithm 3: the s-step engine at s=1.  ``b`` is the
+    paper's b'.  ``impl`` selects the Gram-packet backend
+    (``repro.core.gram_packet``)."""
+    plan = SolverPlan(b=b, s=1, impl=impl, tiles=tiles)
+    return s_step_solve(DUAL, plan, X, y, lam, iters, key, x0=alpha0, idx=idx,
+                        w_ref=w_ref)
 
 
 def ca_bdcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int, iters: int,
@@ -94,53 +62,14 @@ def ca_bdcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int, iters: int,
             idx: jax.Array | None = None, w_ref: jax.Array | None = None,
             track_cond: bool = False, impl: str | None = None,
             tiles: tuple[int, int] | None = None) -> SolveResult:
-    """CA-BDCD, Algorithm 4.  Same index stream as :func:`bdcd` => identical
-    iterates in exact arithmetic; one sb' x sb' Gram-packet all-reduce per
-    outer iteration in the distributed version (backend per ``impl``)."""
-    d, n = X.shape
-    if iters % s != 0:
-        raise ValueError(f"iters={iters} must be a multiple of s={s}")
-    if idx is None:
-        idx = sample_blocks(key, n, b, iters)
-    idx = idx.reshape(iters // s, s, b)
-    alpha = jnp.zeros((n,), X.dtype) if alpha0 is None else alpha0
-    w = -X @ alpha / (lam * n)
-    XT = X.T           # once, outside the hot loop
-    sb = s * b
-    tk = _tile_kw(tiles)
+    """CA-BDCD, Algorithm 4: the s-step engine at s>1.  Same index stream as
+    :func:`bdcd` => identical iterates in exact arithmetic; one sb' x sb'
+    Gram-packet all-reduce per outer iteration in the distributed version
+    (backend per ``impl``).  ``iters`` need not be a multiple of ``s``."""
+    plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles, track_cond=track_cond)
+    return s_step_solve(DUAL, plan, X, y, lam, iters, key, x0=alpha0, idx=idx,
+                        w_ref=w_ref)
 
-    def outer(carry, idx_k):
-        w, alpha = carry
-        flat = idx_k.reshape(sb)
-        # One fused panel-free packet: gram = Y^T Y / (lam n^2) + I/n and the
-        # raw projection Y^T w for Y = X[:, flat] (i.e. Y^T = XT[flat, :],
-        # gathered inside the kernel); one all-reduce in the distributed
-        # version.
-        gram, u = gram_packet_sampled(XT, flat, w, scale=1.0 / (lam * n * n),
-                                      scale_r=1.0, reg=1.0 / n, impl=impl,
-                                      **tk)
-        O = overlap_matrix(flat).astype(X.dtype)
-        # I/n is already on gram's diagonal; add only the off-diagonal
-        # duplicate-index overlap terms (O's diagonal is exactly 1).
-        A = gram + (O - jnp.eye(sb, dtype=X.dtype)) / n
-        base = (u - alpha[flat] - y[flat]) / n             # Eq. (18) non-correction terms
-        das = block_forward_substitution(A, base, s, b)
 
-        def inner(c, j):
-            wj, aj = c
-            sl = jax.lax.dynamic_slice_in_dim
-            idx_j = sl(flat, j * b, b)
-            da_j = sl(das, j * b, b)
-            aj = aj.at[idx_j].add(da_j)
-            wj = wj - panel_apply(XT, idx_j, da_j, impl=impl, **tk) / (lam * n)
-            return (wj, aj), _metrics_dual(X, aj, wj, y, lam, w_ref)
-
-        (w, alpha), hist = jax.lax.scan(inner, (w, alpha), jnp.arange(s))
-        if track_cond:
-            # gram already carries the I/n-regularized diagonal (packet reg).
-            hist["gram_cond"] = jnp.full((s,), jnp.linalg.cond(gram))
-        return (w, alpha), hist
-
-    (w, alpha), hist = jax.lax.scan(outer, (w, alpha), idx)
-    hist = {k: v.reshape(iters, *v.shape[2:]) for k, v in hist.items()}
-    return SolveResult(w, alpha, hist)
+# ca_bdcd at s=1 is classical bdcd, so it is the canonical registry entry.
+register_solver("dual", "local", ca_bdcd)

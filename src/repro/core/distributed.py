@@ -1,4 +1,12 @@
-"""Distributed (CA-)BCD / (CA-)BDCD via shard_map + jax.lax collectives.
+"""Distributed (CA-)BCD / (CA-)BDCD: the s-step engine's shard_map backend.
+
+Since PR 3 the four entry points below are thin wrappers over
+``repro.core.engine.s_step_solve_sharded`` -- the SAME outer-step body as the
+single-device solvers, wrapped in shard_map with the formulation's layout and
+one all-reduce inserted at the packet (``engine._packet_reduce``).  There is
+no duplicated outer/inner loop pair here anymore; this module only carries
+the public signatures, the mesh helper, and the lowering helper used by the
+collective-count tests.
 
 Layouts follow the paper's analysis (section 4):
 
@@ -9,89 +17,40 @@ Layouts follow the paper's analysis (section 4):
   sharded, vectors in R^n replicated (Theorems 2/7).
 
 Communication structure (the paper's claim, verified by HLO count in tests):
-
-  classical:  2 all-reduces per iteration      (Gram; residual)
-  classical fused: 1 all-reduce per iteration  (ours: Gram || residual packet)
-  CA(s):      2 all-reduces per s iterations
-  CA(s) fused: 1 all-reduce per s iterations   (default)
-
-The fused packet is a beyond-paper optimization: the sb x sb Gram and the
-sb-vector residual contribution are concatenated into ONE sb x (sb+1) operand
-so each outer iteration has exactly one synchronization event on the wire.
-``fuse_packet=False`` reproduces the paper's two-reduction schedule for the
-faithful baseline measured in EXPERIMENTS.md section Perf.
+every outer iteration has exactly ONE synchronization event on the wire.
+``fuse_packet=True`` (default) concatenates the sb x sb Gram and the
+sb-vector residual into one sb x (sb+1) operand; ``fuse_packet=False`` keeps
+the paper's two logical reductions as separate operands but packs them into
+one explicit variadic psum (``engine.psum_variadic``), so the collective
+*count* is schedule-independent -- 1 all-reduce per outer iteration either
+way, which tests/dist_checks.py pins down.  (Before PR 3 the unfused baseline
+emitted 2 all-reduces/iteration on XLA builds without the all-reduce
+combiner; the ROADMAP open item this resolves.)
 
 All devices compute identical block indices from the replicated key (the
 paper's shared-seed trick), so the overlap terms and the inner block forward
-substitution are local and replicated.
-
-The local (G, r) contributions are built panel-free by the Gram-backend
-dispatch layer (``repro.kernels.gram.gram_packet_sampled``): each shard hands
-the kernel its local X shard plus the replicated block indices, and the
-sampled rows are gathered inside the kernel (scalar-prefetched indices, rows
-DMA'd HBM->VMEM on TPU; jnp gather on the CPU reference).  The local sampled
-panel ``Yl`` is never materialized -- the deferred vector updates
-(``al += Yl^T dws`` / ``wl -= Yl das``) run through ``panel_apply`` on the
-same (shard, indices) pair.  The dual layout pre-transposes its shard once,
-outside the scan, so column sampling becomes row sampling -- at the cost of
-2x the shard's resident footprint while the solve runs (see the memory note
-in ``repro.core.bdcd``).  ``impl=`` selects the backend per solver; mesh
-construction and shard_map go through ``repro.compat`` so the same code runs
-on JAX 0.4.37 and newer API generations.
+substitution are local and replicated.  The local (G, r) contributions are
+built panel-free by ``gram_packet_sampled`` on each shard (see the data-flow
+notes in ``repro.core.bcd`` / ``repro.core.bdcd``); mesh construction and
+shard_map go through ``repro.compat`` so the same code runs on JAX 0.4.37
+and newer API generations.
 """
 from __future__ import annotations
-
-import functools
-import math
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
-from repro.kernels.gram import gram_packet_sampled, panel_apply
 
-from .bcd import _tile_kw
-from .sampling import overlap_matrix, sample_blocks
-from .subproblem import block_forward_substitution, solve_spd
+from .engine import (FORMULATIONS, SolverPlan, get_solver, register_solver,
+                     s_step_solve_sharded)
 
 
 def make_solver_mesh(n_devices: int | None = None, name: str = "shards") -> Mesh:
     devs = jax.devices()
     n = n_devices or len(devs)
     return compat.make_mesh((n,), (name,))
-
-
-def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
-    """Zero-pad ``axis`` of x up to a multiple of ``mult``.  Zero rows/columns
-    of X contribute nothing to Grams, residuals or updates, and the sampler
-    only draws indices < the true size, so padding is exact (tested)."""
-    size = x.shape[axis]
-    pad = (-size) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
-
-
-def _axes(axis) -> tuple:
-    return axis if isinstance(axis, tuple) else (axis,)
-
-
-def _pvary(x, axis):
-    """Mark a locally-created array as device-varying over ``axis`` (scan-carry
-    vma bookkeeping inside shard_map; no-op on pre-vma JAX)."""
-    return compat.pvary(x, _axes(axis))
-
-
-def _psum_packet(G_local, r_local, axis, fuse):
-    sb = G_local.shape[0]
-    if fuse:
-        packet = jax.lax.psum(
-            jnp.concatenate([G_local, r_local[:, None]], axis=1), axis)
-        return packet[:, :sb], packet[:, sb]
-    return jax.lax.psum(G_local, axis), jax.lax.psum(r_local, axis)
 
 
 # --------------------------------------------------------------------------
@@ -109,49 +68,10 @@ def ca_bcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
     alpha sharded over n).  ``impl`` selects the Gram-packet backend for the
     local (G, r) contributions (see ``repro.kernels.gram``); ``tiles`` pins
     the kernel's (bm, bk) instead of the autotuned pick."""
-    d, n = X.shape
-    if iters % s:
-        raise ValueError(f"iters={iters} must be a multiple of s={s}")
-    if idx is None:
-        idx = sample_blocks(key, d, b, iters)
-    idx = idx.reshape(iters // s, s, b)
-    sb = s * b
-    dtype = X.dtype
-    tk = _tile_kw(tiles)
-    n_shards = math.prod(mesh.shape[a] for a in _axes(axis))
-    X = _pad_to(X, n_shards, axis=1)
-    y = _pad_to(y, n_shards, axis=0)
-
-    def body(Xl, yl, idx_rep):
-        w = jnp.zeros((d,), dtype)
-        # alpha is device-varying (each shard owns a slice of R^n); mark the
-        # initial zeros as varying over the mesh axis for the scan carry.
-        al = _pvary(jnp.zeros(yl.shape, dtype), axis)
-
-        def outer(carry, idx_k):
-            w, al = carry
-            # Local (Gram, residual) contribution, panel-free: the sampled
-            # rows of the local shard are gathered inside the kernel; reg
-            # stays 0 here -- the regularizer is added once, after the psum.
-            flat = idx_k.reshape(sb)
-            Gl, rl = gram_packet_sampled(Xl, flat, yl - al, scale=1.0 / n,
-                                         reg=0.0, impl=impl, **tk)
-            G, r = _psum_packet(Gl, rl, axis, fuse_packet)   # THE sync point
-            A = G + lam * overlap_matrix(flat).astype(dtype)
-            base = r - lam * w[flat]
-            dws = block_forward_substitution(A, base, s, b)  # local, replicated
-            w = w.at[flat].add(dws)                          # Eq. (9), replicated
-            al = al + panel_apply(Xl, flat, dws, impl=impl, **tk)  # Eq. (10), local shard
-            return (w, al), None
-
-        (w, al), _ = jax.lax.scan(outer, (w, al), idx_rep, unroll=unroll)
-        return w, al
-
-    fn = compat.shard_map(body, mesh=mesh,
-                          in_specs=(P(None, axis), P(axis), P(None)),
-                          out_specs=(P(None), P(axis)))
-    w, alpha = fn(X, y, idx)
-    return w, alpha[:n]
+    plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles,
+                      fuse_packet=fuse_packet, unroll=unroll)
+    return s_step_solve_sharded("primal", plan, mesh, X, y, lam, iters, key,
+                                axis=axis, idx=idx)
 
 
 def bcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
@@ -159,9 +79,9 @@ def bcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
                 fuse_packet: bool = False, idx: jax.Array | None = None,
                 impl: str | None = None,
                 tiles: tuple[int, int] | None = None):
-    """Classical distributed BCD (Theorem 1 schedule): per-iteration reductions.
-    Implemented as CA with s=1; ``fuse_packet=False`` keeps the paper's separate
-    Gram and residual reductions."""
+    """Classical distributed BCD (Theorem 1 schedule): per-iteration
+    reductions, i.e. the engine at s=1; ``fuse_packet=False`` keeps the
+    paper's separate Gram and residual operands (variadic packet)."""
     return ca_bcd_sharded(mesh, X, y, lam, b, 1, iters, key, axis=axis,
                           fuse_packet=fuse_packet, idx=idx, impl=impl,
                           tiles=tiles)
@@ -179,53 +99,10 @@ def ca_bdcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
                     tiles: tuple[int, int] | None = None):
     """CA-BDCD with X (d, n) sharded over rows.  Returns (w sharded over d,
     alpha replicated).  ``impl`` selects the Gram-packet backend."""
-    d, n = X.shape
-    if iters % s:
-        raise ValueError(f"iters={iters} must be a multiple of s={s}")
-    if idx is None:
-        idx = sample_blocks(key, n, b, iters)
-    idx = idx.reshape(iters // s, s, b)
-    sb = s * b
-    dtype = X.dtype
-    tk = _tile_kw(tiles)
-    n_shards = math.prod(mesh.shape[a] for a in _axes(axis))
-    X = _pad_to(X, n_shards, axis=0)
-
-    def body(Xl, y_rep, idx_rep):
-        wl = _pvary(jnp.zeros(Xl.shape[:1], dtype), axis)  # local shard of w
-        alpha = jnp.zeros((n,), dtype)             # replicated dual iterate
-        XlT = Xl.T         # once per shard, outside the scan: the sampled
-        # columns of Xl become rows, so the packet and the deferred update
-        # stay panel-free inside the hot loop.
-
-        def outer(carry, idx_k):
-            wl, alpha = carry
-            flat = idx_k.reshape(sb)
-            # One panel-free packet: Gl = Yl^T Yl / (lam n^2) plus the
-            # *unscaled* local contribution to Y^T w (scale_r=1), with
-            # Yl^T = XlT[flat, :] gathered inside the kernel; reg added after
-            # the psum.
-            Gl, ul = gram_packet_sampled(XlT, flat, wl,
-                                         scale=1.0 / (lam * n * n),
-                                         scale_r=1.0, reg=0.0, impl=impl,
-                                         **tk)
-            G, u = _psum_packet(Gl, ul, axis, fuse_packet)   # THE sync point
-            A = G + overlap_matrix(flat).astype(dtype) / n
-            base = (u - alpha[flat] - y_rep[flat]) / n
-            das = block_forward_substitution(A, base, s, b)
-            alpha = alpha.at[flat].add(das)                  # Eq. (20), replicated
-            # Eq. (19), local shard: wl -= Yl das / (lam n).
-            wl = wl - panel_apply(XlT, flat, das, impl=impl, **tk) / (lam * n)
-            return (wl, alpha), None
-
-        (wl, alpha), _ = jax.lax.scan(outer, (wl, alpha), idx_rep, unroll=unroll)
-        return wl, alpha
-
-    fn = compat.shard_map(body, mesh=mesh,
-                          in_specs=(P(axis, None), P(None), P(None)),
-                          out_specs=(P(axis), P(None)))
-    wl, alpha = fn(X, y, idx)
-    return wl[:d], alpha
+    plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles,
+                      fuse_packet=fuse_packet, unroll=unroll)
+    return s_step_solve_sharded("dual", plan, mesh, X, y, lam, iters, key,
+                                axis=axis, idx=idx)
 
 
 def bdcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
@@ -239,31 +116,68 @@ def bdcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
                            tiles=tiles)
 
 
+# The CA wrappers (s=1 = classical) are the canonical registry entries.
+register_solver("primal", "sharded", ca_bcd_sharded)
+register_solver("dual", "sharded", ca_bdcd_sharded)
+
+
 # --------------------------------------------------------------------------
 # Lowering helpers (used by tests, benchmarks, and the dry-run)
 # --------------------------------------------------------------------------
 
+_CALLABLE_FORMULATION = {}  # populated below; callable wrapper -> registry key
+
+
+def _resolve_formulation(solver):
+    if isinstance(solver, str):
+        return solver
+    try:
+        return _CALLABLE_FORMULATION[solver]
+    except KeyError:
+        raise ValueError(
+            f"lower_solver expects a formulation name {tuple(FORMULATIONS)} "
+            f"or one of the sharded solver entry points, got {solver!r}"
+        ) from None
+
+
+_CALLABLE_FORMULATION.update({
+    ca_bcd_sharded: "primal", bcd_sharded: "primal",
+    ca_bdcd_sharded: "dual", bdcd_sharded: "dual",
+})
+
+
 def lower_solver(solver, mesh: Mesh, d: int, n: int, lam: float, b: int, s: int,
                  iters: int, *, axis: str = "shards", fuse_packet: bool = True,
-                 dtype=jnp.float32, col_sharded: bool = True, unroll: int = 1,
-                 impl: str | None = None,
+                 dtype=jnp.float32, col_sharded: bool | None = None,
+                 unroll: int = 1, impl: str | None = None,
                  tiles: tuple[int, int] | None = None):
     """Lower+compile a solver on abstract operands; returns the Compiled object
-    (for HLO collective counting and roofline terms).  ``impl`` and ``tiles``
-    (explicit kernel (bm, bk), overriding the autotuned pick) are forwarded to
-    the solver's Gram-packet dispatch."""
+    (for HLO collective counting and roofline terms).  ``solver`` is a
+    formulation name from the registry (``"primal"`` / ``"dual"``) or one of
+    the sharded entry points above (back-compat).  Input shardings are derived
+    from the formulation's layout; ``col_sharded`` is retained for callers
+    that pin it explicitly.  ``impl`` and ``tiles`` (explicit kernel (bm, bk),
+    overriding the autotuned pick) are forwarded to the solver's Gram-packet
+    dispatch."""
     from jax.sharding import NamedSharding
-    xspec = P(None, axis) if col_sharded else P(axis, None)
-    yspec = P(axis) if col_sharded else P(None)
+    formulation = _resolve_formulation(solver)
+    solve = get_solver(formulation, "sharded")
+    if col_sharded is None:
+        # The Formulation owns its layout: lower with the same input specs
+        # its shard_map body expects, so the compiled collective schedule is
+        # the solver's own (no resharding inserted by jit).
+        xspec, yspec, _ = FORMULATIONS[formulation].dist_in_specs(axis)
+    else:
+        xspec = P(None, axis) if col_sharded else P(axis, None)
+        yspec = P(axis) if col_sharded else P(None)
     X = jax.ShapeDtypeStruct((d, n), dtype, sharding=NamedSharding(mesh, xspec))
-    y_len = n
-    y = jax.ShapeDtypeStruct((y_len,), dtype, sharding=NamedSharding(mesh, yspec))
+    y = jax.ShapeDtypeStruct((n,), dtype, sharding=NamedSharding(mesh, yspec))
     key = jax.ShapeDtypeStruct((2,), jnp.uint32)
 
     def run(Xv, yv, keyv):
-        return solver(mesh, Xv, yv, lam, b, s, iters,
-                      jax.random.wrap_key_data(keyv), axis=axis,
-                      fuse_packet=fuse_packet, unroll=unroll, impl=impl,
-                      tiles=tiles)
+        return solve(mesh, Xv, yv, lam, b, s, iters,
+                     jax.random.wrap_key_data(keyv), axis=axis,
+                     fuse_packet=fuse_packet, unroll=unroll, impl=impl,
+                     tiles=tiles)
 
     return jax.jit(run).lower(X, y, key).compile()

@@ -1,0 +1,584 @@
+"""The one s-step engine behind every (CA-)BCD / (CA-)BDCD variant.
+
+The paper's communication-avoiding transform is a single algorithmic idea
+(DESIGN.md section 5): sample ``s`` coordinate blocks up front, build ONE
+``sb x sb`` Gram packet at the single communication point, then run ``s``
+communication-free inner solves by block forward substitution.  Everything
+that distinguishes the primal from the dual solver -- which operand's rows
+are sampled, the packet's scale/regularizer, the subproblem right-hand side,
+which iterate the deferred update touches -- is data, not control flow.  This
+module therefore factors the repo's former six hand-rolled solver loops
+(``bcd``/``ca_bcd``, ``bdcd``/``ca_bdcd``, and the two shard_map variants)
+into
+
+* a :class:`Formulation` (primal / dual): the handful of problem-specific
+  hooks above, bound to concrete operands by ``bind`` / ``bind_shard``;
+* a :class:`SolverPlan`: the execution knobs (b, s, backend ``impl``, kernel
+  ``tiles``, ``fuse_packet``, ``unroll``, ``track_cond``) -- ``s=1`` *is* the
+  classical variant, not a separate loop;
+* ONE driver, :func:`s_step_solve`, whose outer ``lax.scan`` body
+  (:func:`_outer_step`) is the only s-step hot loop in the repo.  The
+  distributed path (:func:`s_step_solve_sharded`) wraps the *same* driver in
+  ``shard_map`` and flips exactly one switch: the packet regularizer moves
+  out of the kernel and an all-reduce (:func:`_packet_reduce`) is inserted at
+  the one communication point.
+
+``iters`` need not be a multiple of ``s``: the driver runs ``iters // s`` full outer
+iterations through the scan and, when ``iters % s != 0``, one ragged final
+outer iteration through the same body with ``s_k = iters % s`` -- the CA
+identity holds for any grouping of the index stream, so the iterates still
+match the classical schedule bit-for-bit in exact arithmetic.
+
+New formulations (the proximal/sparse methods of arXiv:1712.06047, the kernel
+BDCD of arXiv:2406.18001) plug in by implementing the Formulation hooks and
+registering under a name -- no new loop, no new shard_map.  The registry
+(:func:`register_solver` / :func:`get_solver`, keyed on ``(formulation,
+backend)``) is how launch scripts, benchmarks, and examples select solvers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import compat
+from repro.kernels.gram import PacketPlan, gram_packet_sampled, panel_apply
+from repro.kernels.gram.ops import _pad_axis
+
+from .sampling import overlap_matrix, sample_blocks
+from .subproblem import block_forward_substitution
+
+
+class SolveResult(NamedTuple):
+    w: jax.Array          # (d,) primal iterate
+    alpha: jax.Array      # (n,) auxiliary iterate (X^T w primal; dual vector)
+    history: dict         # metric name -> (iters,) array (per inner iteration)
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverPlan:
+    """Everything the engine needs to know besides the problem data.
+
+    ``b`` is the paper's block size (b' for the dual), ``s`` the loop-blocking
+    parameter (s=1 recovers the classical algorithm).  ``impl``/``tiles``
+    select the Gram-packet kernel backend and its (bm, bk) -- collapsed into
+    one :class:`~repro.kernels.gram.PacketPlan` handed to every kernel call.
+    ``fuse_packet`` picks the wire layout of the distributed reduction (see
+    :func:`_packet_reduce`); ``unroll`` is forwarded to the outer scan;
+    ``track_cond`` records cond(Gram) per outer iteration in the history.
+    """
+    b: int
+    s: int = 1
+    impl: str | None = None
+    tiles: tuple[int, int] | None = None
+    fuse_packet: bool = True
+    unroll: int = 1
+    track_cond: bool = False
+
+    @property
+    def packet(self) -> PacketPlan:
+        return PacketPlan.make(impl=self.impl, tiles=self.tiles)
+
+
+@runtime_checkable
+class BoundFormulation(Protocol):
+    """A formulation bound to concrete operands (global or one shard's).
+
+    The engine samples rows of ``operand``; the packet it builds is
+    ``G = scale * Y Y^T + reg * I`` and ``r = scale_r * Y u`` for
+    ``Y = operand[flat, :]`` and ``u = packet_vector(carry)``.  ``reg`` is
+    also the coefficient of the duplicate-index overlap term, which is why a
+    single scalar serves both the fused local diagonal and the post-reduce
+    correction.
+    """
+    operand: jax.Array
+
+    @property
+    def scale(self) -> float: ...
+    @property
+    def scale_r(self) -> float | None: ...
+    @property
+    def reg(self) -> float: ...
+    def init_carry(self, axes: tuple | None = None) -> tuple: ...
+    def packet_vector(self, carry) -> jax.Array: ...
+    def base(self, r: jax.Array, carry, flat: jax.Array) -> jax.Array: ...
+    def update(self, carry, idx: jax.Array, dx: jax.Array,
+               pp: PacketPlan) -> tuple: ...
+    def metrics(self, carry) -> dict: ...
+
+
+class Formulation(Protocol):
+    """A problem formulation: how to bind data to a :class:`BoundFormulation`
+    and how its operands shard (DESIGN.md section 5.2)."""
+    name: str
+
+    def sample_dim(self, d: int, n: int) -> int: ...
+    def bind(self, X, y, lam, *, x0=None, w_ref=None) -> BoundFormulation: ...
+    def pad_shards(self, X, y, n_shards: int) -> tuple: ...
+    def bind_shard(self, Xl, yl, lam, *, d: int, n: int) -> BoundFormulation: ...
+    def dist_in_specs(self, axis) -> tuple: ...
+    def dist_out_specs(self, axis) -> tuple: ...
+    def dist_finalize(self, w, alpha, d: int, n: int) -> tuple: ...
+
+
+# --------------------------------------------------------------------------
+# Shared metric helpers
+# --------------------------------------------------------------------------
+
+def _objective_from_alpha(alpha, w, y, lam):
+    # alpha == X^T w is maintained by the residual-form recurrence, so the
+    # objective costs O(n + d) per iteration instead of O(dn).
+    n = alpha.shape[0]
+    r = alpha - y
+    return 0.5 / n * (r @ r) + 0.5 * lam * (w @ w)
+
+
+def _sol_err(w, w_ref):
+    return jnp.linalg.norm(w - w_ref) / jnp.linalg.norm(w_ref)
+
+
+# --------------------------------------------------------------------------
+# Primal formulation: min_w lam/2 ||w||^2 + 1/(2n) ||X^T w - y||^2
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _BoundPrimal:
+    """Algorithm 1/2 hooks; ``operand`` is X (d, n) or a column shard of it.
+
+    Packet: Gamma = Y Y^T / n + lam I with Y = X[flat, :] and the residual
+    contribution Y (y - alpha) / n of the Eq. (7)/(8) rhs; base subtracts the
+    lam w term; the inner update is w[idx] += dw, alpha += Y_j^T dw (Eqs. 5,
+    9-10).  All expressions are layout-neutral: on a column shard (y and
+    alpha local, w replicated) they compute exactly the local contribution.
+    """
+    operand: jax.Array
+    y: jax.Array            # aligned with operand's columns
+    lam: float
+    n: int                  # GLOBAL data-point count (scales use it)
+    d: int
+    w0: jax.Array | None = None
+    w_ref: jax.Array | None = None
+
+    @property
+    def scale(self):
+        return 1.0 / self.n
+
+    @property
+    def scale_r(self):
+        return None         # defaults to scale
+
+    @property
+    def reg(self):
+        return self.lam
+
+    def init_carry(self, axes=None):
+        X = self.operand
+        w = jnp.zeros((self.d,), X.dtype) if self.w0 is None else self.w0
+        if axes is not None:
+            # alpha is device-varying (each shard owns a slice of R^n); w is
+            # replicated.  Warm starts are a single-device affordance.
+            return w, compat.pvary(jnp.zeros(self.y.shape, X.dtype), axes)
+        alpha = X.T @ w if self.w0 is not None else jnp.zeros((self.n,), X.dtype)
+        return w, alpha
+
+    def packet_vector(self, carry):
+        return self.y - carry[1]
+
+    def base(self, r, carry, flat):
+        return r - self.lam * carry[0][flat]               # Eq. (7)/(8) rhs
+
+    def update(self, carry, idx, dx, pp):
+        w, alpha = carry
+        w = w.at[idx].add(dx)                              # Eq. (9)
+        alpha = alpha + panel_apply(self.operand, idx, dx, plan=pp)  # Eq. (5)/(10)
+        return w, alpha
+
+    def metrics(self, carry):
+        w, alpha = carry
+        m = {"objective": _objective_from_alpha(alpha, w, self.y, self.lam)}
+        if self.w_ref is not None:
+            m["sol_err"] = _sol_err(w, self.w_ref)
+        return m
+
+
+class PrimalRidge:
+    """(CA-)BCD: samples features (rows of X); 1D-block-column layout."""
+    name = "primal"
+
+    def sample_dim(self, d, n):
+        return d
+
+    def bind(self, X, y, lam, *, x0=None, w_ref=None):
+        d, n = X.shape
+        return _BoundPrimal(operand=X, y=y, lam=lam, n=n, d=d, w0=x0,
+                            w_ref=w_ref)
+
+    def pad_shards(self, X, y, n_shards):
+        return _pad_to(X, n_shards, 1), _pad_to(y, n_shards, 0)
+
+    def bind_shard(self, Xl, yl, lam, *, d, n):
+        return _BoundPrimal(operand=Xl, y=yl, lam=lam, n=n, d=d)
+
+    def dist_in_specs(self, axis):
+        return P(None, axis), P(axis), P(None)
+
+    def dist_out_specs(self, axis):
+        return P(None), P(axis)
+
+    def dist_finalize(self, w, alpha, d, n):
+        return w, alpha[:n]
+
+
+# --------------------------------------------------------------------------
+# Dual formulation: min_alpha lam/2 ||X alpha/(lam n)||^2 + 1/(2n) ||alpha + y||^2
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _BoundDual:
+    """Algorithm 3/4 hooks; ``operand`` is X^T (n, d) or a pre-transposed row
+    shard Xl^T (n, dl) -- the dual samples *columns* of X, and pre-transposing
+    once outside the hot loop turns them into contiguous rows for the sampled
+    kernel (memory tradeoff discussed in ``repro.core.bdcd``).
+
+    Packet: Theta = Y^T Y / (lam n^2) + I/n with Y = X[:, flat] plus the RAW
+    projection Y^T w (scale_r=1); base assembles Eq. (17)/(18); the inner
+    update is alpha[idx] += da, w -= Y_j da / (lam n) (Eqs. 15, 19-20).  On a
+    row shard (w local, alpha and y replicated) the same expressions compute
+    the local contribution.
+    """
+    operand: jax.Array
+    y: jax.Array            # (n,), replicated in the distributed layout
+    lam: float
+    n: int                  # GLOBAL data-point count
+    X: jax.Array | None = None      # full X, for init + metrics (local mode)
+    alpha0: jax.Array | None = None
+    w_ref: jax.Array | None = None
+
+    @property
+    def scale(self):
+        return 1.0 / (self.lam * self.n * self.n)
+
+    @property
+    def scale_r(self):
+        return 1.0
+
+    @property
+    def reg(self):
+        return 1.0 / self.n
+
+    def init_carry(self, axes=None):
+        dtype = self.operand.dtype
+        if axes is not None:
+            # w is device-varying (each shard owns a slice of R^d); alpha is
+            # replicated.
+            wl = compat.pvary(jnp.zeros((self.operand.shape[1],), dtype), axes)
+            return wl, jnp.zeros((self.n,), dtype)
+        alpha = jnp.zeros((self.n,), dtype) if self.alpha0 is None else self.alpha0
+        w = -self.X @ alpha / (self.lam * self.n)
+        return w, alpha
+
+    def packet_vector(self, carry):
+        return carry[0]
+
+    def base(self, u, carry, flat):
+        w, alpha = carry
+        return (u - alpha[flat] - self.y[flat]) / self.n   # Eq. (17)/(18)
+
+    def update(self, carry, idx, dx, pp):
+        w, alpha = carry
+        alpha = alpha.at[idx].add(dx)                      # Eq. (20)
+        # Eq. (15)/(19): w -= X[:, idx] @ dx / (lam n) == operand[idx]^T dx / (lam n).
+        w = w - panel_apply(self.operand, idx, dx, plan=pp) / (self.lam * self.n)
+        return w, alpha
+
+    def metrics(self, carry):
+        # Primal objective evaluated at the dual-generated primal iterate w:
+        # X^T w is O(dn), affordable at the paper's figure sizes; the
+        # distributed fast path skips metrics entirely.
+        w, alpha = carry
+        n = self.n
+        r = self.X.T @ w - self.y
+        m = {"objective": 0.5 / n * (r @ r) + 0.5 * self.lam * (w @ w)}
+        if self.w_ref is not None:
+            m["sol_err"] = _sol_err(w, self.w_ref)
+        return m
+
+
+class DualRidge:
+    """(CA-)BDCD: samples data points (columns of X); 1D-block-row layout."""
+    name = "dual"
+
+    def sample_dim(self, d, n):
+        return n
+
+    def bind(self, X, y, lam, *, x0=None, w_ref=None):
+        return _BoundDual(operand=X.T, y=y, lam=lam, n=X.shape[1], X=X,
+                          alpha0=x0, w_ref=w_ref)
+
+    def pad_shards(self, X, y, n_shards):
+        return _pad_to(X, n_shards, 0), y
+
+    def bind_shard(self, Xl, yl, lam, *, d, n):
+        # Transposed once per shard, outside the scan: sampled columns become
+        # contiguous rows for the index-prefetched kernel.
+        return _BoundDual(operand=Xl.T, y=yl, lam=lam, n=n)
+
+    def dist_in_specs(self, axis):
+        return P(axis, None), P(None), P(None)
+
+    def dist_out_specs(self, axis):
+        return P(axis), P(None)
+
+    def dist_finalize(self, w, alpha, d, n):
+        return w[:d], alpha
+
+
+FORMULATIONS: dict[str, Formulation] = {
+    "primal": PrimalRidge(),
+    "dual": DualRidge(),
+}
+
+
+# --------------------------------------------------------------------------
+# The communication point
+# --------------------------------------------------------------------------
+
+def _axes(axis) -> tuple:
+    return axis if isinstance(axis, tuple) else (axis,)
+
+
+def psum_variadic(leaves, axis):
+    """ONE all-reduce for any list of same-dtype arrays: ravel, concatenate,
+    psum, split.  This is the explicit variadic packet: XLA builds without
+    the all-reduce combiner would otherwise emit one op per array (the
+    ROADMAP's 2-all-reduces-per-iteration artifact), which breaks the
+    latency accounting the collective-count tests pin down."""
+    shapes = [x.shape for x in leaves]
+    flat = jnp.concatenate([x.ravel() for x in leaves])
+    red = jax.lax.psum(flat, axis)
+    out, off = [], 0
+    for sh in shapes:
+        size = math.prod(sh)
+        out.append(red[off:off + size].reshape(sh))
+        off += size
+    return out
+
+
+def _packet_reduce(G_local, r_local, axis, fuse):
+    """THE sync point: one all-reduce per outer iteration, either as the
+    fused sb x (sb+1) Gram||residual operand (``fuse_packet=True``, ours) or
+    as the explicit variadic packet of the two separate operands
+    (``fuse_packet=False``, the paper's two logical reductions packed into
+    one wire message)."""
+    if axis is None:
+        return G_local, r_local
+    if fuse:
+        sb = G_local.shape[0]
+        packet = jax.lax.psum(
+            jnp.concatenate([G_local, r_local[:, None]], axis=1), axis)
+        return packet[:, :sb], packet[:, sb]
+    G, r = psum_variadic([G_local, r_local], axis)
+    return G, r
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    """Zero-pad ``axis`` of x up to a multiple of ``mult``.  Zero rows/columns
+    of X contribute nothing to Grams, residuals or updates, and the sampler
+    only draws indices < the true size, so padding is exact (tested)."""
+    return _pad_axis(x, mult, axis)
+
+
+# --------------------------------------------------------------------------
+# The one s-step body + driver
+# --------------------------------------------------------------------------
+
+def _outer_step(bound: BoundFormulation, plan: SolverPlan, s_k: int, carry,
+                idx_k, *, axis=None, collect=False):
+    """ONE outer iteration of the s-step method -- the repo's only solver hot
+    loop.  ``s_k`` is the number of inner blocks this outer iteration carries
+    (``plan.s`` normally; ``iters % s`` for the ragged tail).
+
+    Local mode (``axis=None``): the regularizer rides the kernel's fused
+    diagonal and only the off-diagonal duplicate-index overlap terms are
+    added (none exist at s_k=1, where the packet Gram IS the subproblem
+    matrix).  Distributed mode: the local contribution is reduced by
+    :func:`_packet_reduce` and the regularizer + full overlap are added once,
+    after the psum, on the replicated result.
+    """
+    b = plan.b
+    sb = s_k * b
+    pp = plan.packet
+    dtype = bound.operand.dtype
+    flat = idx_k.reshape(sb)
+    dist = axis is not None
+    Gl, rl = gram_packet_sampled(bound.operand, flat, bound.packet_vector(carry),
+                                 scale=bound.scale, scale_r=bound.scale_r,
+                                 reg=0.0 if dist else bound.reg, plan=pp)
+    G, r = _packet_reduce(Gl, rl, axis, plan.fuse_packet)
+    if dist:
+        A = G + bound.reg * overlap_matrix(flat).astype(dtype)
+    elif s_k == 1:
+        A = G           # a single block has no cross-block overlap terms
+    else:
+        O = overlap_matrix(flat).astype(dtype)             # shared-seed trick
+        # reg is already on G's diagonal; add only the off-diagonal
+        # duplicate-index overlap terms (O's diagonal is exactly 1).
+        A = G + bound.reg * (O - jnp.eye(sb, dtype=dtype))
+    base = bound.base(r, carry, flat)
+    dxs = block_forward_substitution(A, base, s_k, b)
+
+    if not collect:
+        # Fast path (distributed): apply all s_k blocks in one deferred
+        # update -- sum_j Y_j^T dx_j == Y^T dxs.
+        return bound.update(carry, flat, dxs, pp), None
+
+    # Metric path: reconstruct the per-inner-iteration trajectory locally.
+    def inner(c, j):
+        sl = jax.lax.dynamic_slice_in_dim
+        c = bound.update(c, sl(flat, j * b, b), sl(dxs, j * b, b), pp)
+        return c, bound.metrics(c)
+
+    carry, hist = jax.lax.scan(inner, carry, jnp.arange(s_k))
+    if plan.track_cond:
+        # G already carries the regularized diagonal (local packet reg).
+        hist["gram_cond"] = jnp.full((s_k,), jnp.linalg.cond(G))
+    return carry, hist
+
+
+def _check_idx(idx, iters: int, b: int) -> None:
+    """An explicit index stream must cover exactly the requested iterations
+    (the pre-engine CA solvers raised on the mismatch via their reshape; keep
+    that contract rather than silently running idx's length)."""
+    if idx.shape != (iters, b):
+        raise ValueError(
+            f"idx shape {idx.shape} does not match (iters, b) = ({iters}, {b})")
+
+
+def _drive(bound: BoundFormulation, plan: SolverPlan, idx, *, axis=None,
+           collect=True):
+    """The engine's s-step scan: ``iters // s`` outer iterations through ONE
+    ``lax.scan`` over :func:`_outer_step`, plus (when ``iters % s != 0``) a
+    single ragged call of the same body with ``s_k = iters % s``."""
+    s, b = plan.s, plan.b
+    iters = idx.shape[0]
+    outer_full, rem = divmod(iters, s)
+    carry = bound.init_carry(axes=None if axis is None else _axes(axis))
+    hists = []
+    if outer_full:
+        def outer(c, idx_k):
+            return _outer_step(bound, plan, s, c, idx_k, axis=axis,
+                               collect=collect)
+        carry, hist = jax.lax.scan(outer, carry,
+                                   idx[:outer_full * s].reshape(outer_full, s, b),
+                                   unroll=plan.unroll)
+        if collect:
+            hists.append({k: v.reshape(outer_full * s, *v.shape[2:])
+                          for k, v in hist.items()})
+    if rem:
+        carry, hist = _outer_step(bound, plan, rem, carry, idx[outer_full * s:],
+                                  axis=axis, collect=collect)
+        if collect:
+            hists.append(hist)
+    if len(hists) > 1:
+        history = {k: jnp.concatenate([h[k] for h in hists]) for k in hists[0]}
+    else:
+        history = hists[0] if hists else {}
+    return carry, history
+
+
+def s_step_solve(formulation: Formulation | str, plan: SolverPlan,
+                 X: jax.Array, y: jax.Array, lam: float, iters: int,
+                 key: jax.Array | None = None, *, x0: jax.Array | None = None,
+                 idx: jax.Array | None = None,
+                 w_ref: jax.Array | None = None) -> SolveResult:
+    """Single-device s-step solve.  ``plan.s == 1`` IS the classical variant;
+    larger ``s`` trades bandwidth for latency without changing the iterates
+    (the paper's central claim, preserved per-formulation by construction).
+
+    ``x0`` warm-starts the formulation's own iterate (w for primal, alpha for
+    dual).  ``idx`` overrides the sampled index stream -- the classical and
+    CA runs that share it produce identical iterates in exact arithmetic.
+    """
+    form = FORMULATIONS[formulation] if isinstance(formulation, str) else formulation
+    d, n = X.shape
+    if idx is None:
+        idx = sample_blocks(key, form.sample_dim(d, n), plan.b, iters)
+    else:
+        _check_idx(idx, iters, plan.b)
+    bound = form.bind(X, y, lam, x0=x0, w_ref=w_ref)
+    (w, alpha), history = _drive(bound, plan, idx)
+    return SolveResult(w, alpha, history)
+
+
+def s_step_solve_sharded(formulation: Formulation | str, plan: SolverPlan,
+                         mesh: Mesh, X: jax.Array, y: jax.Array, lam: float,
+                         iters: int, key: jax.Array | None = None, *,
+                         axis="shards", idx: jax.Array | None = None):
+    """Distributed s-step solve: the SAME driver as :func:`s_step_solve`,
+    wrapped in ``shard_map`` with the formulation's 1D layout.  The only
+    behavioural differences are the inserted packet all-reduce (one per outer
+    iteration) and the skipped metric reconstruction.  Returns ``(w, alpha)``
+    with the formulation's output sharding.
+    """
+    form = FORMULATIONS[formulation] if isinstance(formulation, str) else formulation
+    d, n = X.shape
+    if idx is None:
+        idx = sample_blocks(key, form.sample_dim(d, n), plan.b, iters)
+    else:
+        _check_idx(idx, iters, plan.b)
+    n_shards = math.prod(mesh.shape[a] for a in _axes(axis))
+    X, y = form.pad_shards(X, y, n_shards)
+
+    def body(Xl, yl, idx_rep):
+        bound = form.bind_shard(Xl, yl, lam, d=d, n=n)
+        carry, _ = _drive(bound, plan, idx_rep, axis=axis, collect=False)
+        return carry
+
+    fn = compat.shard_map(body, mesh=mesh, in_specs=form.dist_in_specs(axis),
+                          out_specs=form.dist_out_specs(axis))
+    w, alpha = fn(X, y, idx)
+    return form.dist_finalize(w, alpha, d, n)
+
+
+# --------------------------------------------------------------------------
+# Solver registry, keyed on (formulation, backend)
+# --------------------------------------------------------------------------
+
+BACKENDS = ("local", "sharded")
+_REGISTRY: dict[tuple[str, str], Callable] = {}
+
+
+def register_solver(formulation: str, backend: str, fn: Callable) -> Callable:
+    """Register a solver entry point under ``(formulation, backend)``.  The
+    four ridge entries are registered by ``repro.core.bcd`` / ``.bdcd`` /
+    ``.distributed`` at import; new formulations add theirs next to their
+    Formulation class."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    _REGISTRY[(formulation, backend)] = fn
+    return fn
+
+
+def get_solver(formulation: str, backend: str = "local") -> Callable:
+    """Look up a solver.  ``local`` entries have the classical CA signature
+    ``(X, y, lam, b, s, iters, key, **kw)``; ``sharded`` entries lead with the
+    mesh: ``(mesh, X, y, lam, b, s, iters, key, **kw)``."""
+    if (formulation, backend) not in _REGISTRY:
+        # The built-in entries are registered by the sibling wrapper modules
+        # at import; pull them in lazily so `from repro.core.engine import
+        # get_solver` works without the package __init__ having run first.
+        from . import bcd, bdcd, distributed  # noqa: F401
+    try:
+        return _REGISTRY[(formulation, backend)]
+    except KeyError:
+        raise KeyError(
+            f"no solver registered for ({formulation!r}, {backend!r}); "
+            f"available: {sorted(_REGISTRY)}") from None
+
+
+def registered_solvers() -> dict[tuple[str, str], Callable]:
+    return dict(_REGISTRY)

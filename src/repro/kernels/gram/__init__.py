@@ -1,11 +1,11 @@
-from .ops import (gram, gram_packet, gram_packet_sampled, normal_matvec,
-                  panel_apply, panel_matvec)
+from .ops import (PacketPlan, gram, gram_packet, gram_packet_sampled,
+                  normal_matvec, panel_apply, panel_matvec)
 from .ref import (gram_packet_ref, gram_packet_sampled_ref, gram_ref,
                   panel_apply_ref, panel_matvec_ref)
 from . import tuning
 
 __all__ = [
-    "gram", "gram_packet", "gram_packet_sampled", "panel_apply",
+    "PacketPlan", "gram", "gram_packet", "gram_packet_sampled", "panel_apply",
     "panel_matvec", "normal_matvec", "gram_ref", "gram_packet_ref",
     "gram_packet_sampled_ref", "panel_apply_ref", "panel_matvec_ref",
     "tuning",

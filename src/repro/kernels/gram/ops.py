@@ -28,8 +28,16 @@ Entry points:
 Tile sizes: callers may pin ``bm``/``bk``; otherwise ``tuning.pick_tiles``
 consults the autotuned (sb, n, dtype) table populated by
 ``benchmarks/gram_autotune.py`` and falls back to the 128/512 heuristic.
+
+Knob threading: callers that issue several packet calls with the same
+backend/tile choices (the solver engine) carry ONE :class:`PacketPlan` and
+pass it as ``plan=`` instead of re-threading ``impl``/``bm``/``bk`` through
+every signature.  Explicitly-passed knobs win over the plan's, so a plan acts
+as a bundle of defaults (DESIGN.md section 5.3).
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +48,36 @@ from .sampled_kernel import (gram_packet_sampled_pallas, panel_apply_pallas,
                              panel_matvec_pallas)
 
 _IMPLS = ("ref", "pallas", "pallas_interpret")
+
+
+@dataclasses.dataclass(frozen=True)
+class PacketPlan:
+    """One bundle of kernel-dispatch knobs for a sequence of packet calls.
+
+    ``impl`` selects the backend (``None`` auto-selects per JAX backend);
+    ``bm``/``bk`` pin the kernel tiles (``None`` consults the tuning table).
+    The solver engine builds one plan per solve and hands it to every
+    ``gram_packet_sampled`` / ``panel_apply`` call in the hot loop, replacing
+    the per-call ``impl=``/``tiles=`` threading of PRs 1-2.
+    """
+    impl: str | None = None
+    bm: int | None = None
+    bk: int | None = None
+
+    @classmethod
+    def make(cls, impl: str | None = None,
+             tiles: tuple[int, int] | None = None) -> "PacketPlan":
+        """Build from the public solver knobs (``impl``, ``tiles=(bm, bk)``)."""
+        if tiles is None:
+            return cls(impl=impl)
+        return cls(impl=impl, bm=tiles[0], bk=tiles[1])
+
+
+def _with_plan(plan: PacketPlan | None, impl, bm, bk):
+    """Resolve per-call knobs against the plan: explicit arguments win."""
+    if plan is None:
+        return impl, bm, bk
+    return impl or plan.impl, bm or plan.bm, bk or plan.bk
 
 
 def _pad_axis(x: jax.Array, mult: int, axis: int) -> jax.Array:
@@ -75,7 +113,8 @@ def gram_packet(A: jax.Array, u: jax.Array, *, scale: float = 1.0,
                 reg: float = 0.0, scale_r: float | None = None,
                 impl: str | None = None,
                 bm: int | None = None, bk: int | None = None,
-                symmetric_skip: bool = True) -> tuple[jax.Array, jax.Array]:
+                symmetric_skip: bool = True,
+                plan: PacketPlan | None = None) -> tuple[jax.Array, jax.Array]:
     """Fused (G, r) = (scale*A@A^T + reg*I, scale_r*A@u); A (m, n), u (n,).
 
     ``scale_r`` defaults to ``scale``.  ``impl`` is one of ``"ref"`` (jnp,
@@ -86,6 +125,7 @@ def gram_packet(A: jax.Array, u: jax.Array, *, scale: float = 1.0,
     Zero padding is exact: padded k-columns contribute 0 to both products and
     padded m-rows are sliced off (their diagonal reg never leaves the pad).
     """
+    impl, bm, bk = _with_plan(plan, impl, bm, bk)
     impl = impl or _auto_impl()
     if impl == "ref":
         return ref.gram_packet_ref(A, u, scale, reg, scale_r)
@@ -105,7 +145,8 @@ def gram_packet_sampled(X: jax.Array, flat: jax.Array, u: jax.Array, *,
                         scale: float = 1.0, reg: float = 0.0,
                         scale_r: float | None = None, impl: str | None = None,
                         bm: int | None = None, bk: int | None = None,
-                        symmetric_skip: bool = True
+                        symmetric_skip: bool = True,
+                        plan: PacketPlan | None = None
                         ) -> tuple[jax.Array, jax.Array]:
     """Panel-free packet: (G, r) = (scale*Y Y^T + reg*I, scale_r*Y u) for
     Y = X[flat, :] *without materializing Y*.  X (d, n), flat (m,) int
@@ -117,6 +158,7 @@ def gram_packet_sampled(X: jax.Array, flat: jax.Array, u: jax.Array, *,
     and padded index slots (clamped to row 0) only touch G/r rows >= m, which
     are sliced off before the regularized diagonal can leak.
     """
+    impl, bm, bk = _with_plan(plan, impl, bm, bk)
     impl = impl or _auto_impl()
     if impl == "ref":
         return ref.gram_packet_sampled_ref(X, flat, u, scale, reg, scale_r)
@@ -138,10 +180,12 @@ def gram_packet_sampled(X: jax.Array, flat: jax.Array, u: jax.Array, *,
 
 def panel_apply(X: jax.Array, flat: jax.Array, v: jax.Array, *,
                 scale: float = 1.0, impl: str | None = None,
-                bm: int | None = None, bk: int | None = None) -> jax.Array:
+                bm: int | None = None, bk: int | None = None,
+                plan: PacketPlan | None = None) -> jax.Array:
     """out(n) = scale * X[flat, :]^T v, panel-free: the deferred vector
     updates (``alpha += Y^T dws``; with X pre-transposed, ``wl -= Yl das``).
     Padded index slots carry v == 0, so their gathered rows contribute 0."""
+    impl, bm, bk = _with_plan(plan, impl, bm, bk)
     impl = impl or _auto_impl()
     if impl == "ref":
         return ref.panel_apply_ref(X, flat, v, scale)
@@ -159,8 +203,10 @@ def panel_apply(X: jax.Array, flat: jax.Array, v: jax.Array, *,
 
 def panel_matvec(X: jax.Array, flat: jax.Array, t: jax.Array, *,
                  scale: float = 1.0, impl: str | None = None,
-                 bm: int | None = None, bk: int | None = None) -> jax.Array:
+                 bm: int | None = None, bk: int | None = None,
+                 plan: PacketPlan | None = None) -> jax.Array:
     """out(m) = scale * X[flat, :] t, panel-free (the residual direction)."""
+    impl, bm, bk = _with_plan(plan, impl, bm, bk)
     impl = impl or _auto_impl()
     if impl == "ref":
         return ref.panel_matvec_ref(X, flat, t, scale)
@@ -179,7 +225,8 @@ def panel_matvec(X: jax.Array, flat: jax.Array, t: jax.Array, *,
 
 def normal_matvec(X: jax.Array, v: jax.Array, *, lam: float = 0.0,
                   scale: float = 1.0, impl: str | None = None,
-                  bm: int | None = None, bk: int | None = None) -> jax.Array:
+                  bm: int | None = None, bk: int | None = None,
+                  plan: PacketPlan | None = None) -> jax.Array:
     """(scale * X X^T + lam I) v as two streaming panel products -- the CG
     normal-equations operator (``core/krylov.py``), never a d x d matrix.
 
@@ -189,6 +236,7 @@ def normal_matvec(X: jax.Array, v: jax.Array, *, lam: float = 0.0,
     kernels by default would handicap the CG baseline the solvers are
     compared against.  The kernel route is opt-in via an explicit ``impl``.
     """
+    impl, bm, bk = _with_plan(plan, impl, bm, bk)
     impl = impl or "ref"
     if impl == "ref":
         return X @ (X.T @ v) * scale + lam * v
@@ -203,9 +251,11 @@ def normal_matvec(X: jax.Array, v: jax.Array, *, lam: float = 0.0,
 
 def gram(A: jax.Array, *, scale: float = 1.0, reg: float = 0.0,
          impl: str | None = None, bm: int | None = None,
-         bk: int | None = None, symmetric_skip: bool = True) -> jax.Array:
+         bk: int | None = None, symmetric_skip: bool = True,
+         plan: PacketPlan | None = None) -> jax.Array:
     """G = scale * A @ A^T + reg * I, via the residual-free Gram kernel (the
     packet kernel's u path is never fed, computed, or written)."""
+    impl, bm, bk = _with_plan(plan, impl, bm, bk)
     impl = impl or _auto_impl()
     if impl == "ref":
         return ref.gram_ref(A, scale, reg)

@@ -8,10 +8,14 @@ and 512 chips (2x16x16), and record the collective schedule per s.
 
 This is hillclimb cell 3 ("most representative of the paper's technique"):
 the measured table is
-    schedule            syncs / H iters     wire bytes / H iters
-    paper-faithful s=1        2H              H * (b^2+b) w
-    paper-faithful s          2H/s            (H/s) * (s^2 b^2 + sb) w
-    ours fused s               H/s            (H/s) * (s^2 b^2 + sb) w
+    schedule              syncs / H iters     wire bytes / H iters
+    unfused variadic s=1        H               H * (b^2+b) w
+    unfused variadic s          H/s             (H/s) * (s^2 b^2 + sb) w
+    ours fused s                H/s             (H/s) * (s^2 b^2 + sb) w
+(the paper's own schedule would be 2 messages per Gram+residual pair; since
+PR 3 the unfused baseline packs both operands into one explicit variadic
+psum, so only the wire layout differs from the fused packet).  Solvers are
+selected from the (formulation, backend) registry via ``lower_solver``.
 Usage: PYTHONPATH=src python -m repro.launch.solver_dryrun [--out DIR]
 """
 import argparse
@@ -20,7 +24,7 @@ import time
 
 import jax
 
-from repro.core import ca_bcd_sharded, count_in_compiled
+from repro.core import count_in_compiled
 from repro.core.distributed import lower_solver
 from repro.launch.mesh import make_production_mesh
 
@@ -37,7 +41,7 @@ def run(out_dir: str = "artifacts/solver", impl: str | None = None) -> list[dict
             if iters % s:
                 continue
             t0 = time.time()
-            comp = lower_solver(ca_bcd_sharded, mesh, d, n, 1e-3, b, s, iters,
+            comp = lower_solver("primal", mesh, d, n, 1e-3, b, s, iters,
                                 axis=axis, fuse_packet=fused,
                                 unroll=iters // s, impl=impl)
             cs = count_in_compiled(comp)

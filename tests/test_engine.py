@@ -1,0 +1,248 @@
+"""Tests for the s-step engine (PR 3 tentpole): one scan, two formulations.
+
+Covers the wiring the refactor must not break:
+  * the engine at s=1 IS the classical algorithm -- checked against an
+    independent hand-rolled BCD/BDCD loop (float64), and bit-for-bit against
+    the thin ``bcd``/``bdcd`` wrappers;
+  * wrapper back-compat: old signatures, warm starts, same ``SolveResult``;
+  * ragged ``iters % s != 0`` (including iters < s) matches the classical
+    iterates -- the CA identity holds for any grouping of the index stream;
+  * ref-vs-pallas_interpret equivalence through the (formulation, backend)
+    registry;
+  * registry completeness and the SolverPlan -> PacketPlan collapse.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FORMULATIONS, PacketPlan, SolverPlan, bcd, bdcd,
+                        ca_bcd, ca_bdcd, get_solver, registered_solvers,
+                        s_step_solve, sample_blocks)
+from repro.data import SyntheticSpec, make_regression
+
+from _x64 import x64_mode  # noqa: F401  (autouse fixture)
+
+LAM = 1e-3
+
+
+@pytest.fixture(scope="module")
+def problem():
+    jax.config.update("jax_enable_x64", True)  # before data gen
+    X, y, _ = make_regression(jax.random.key(0),
+                              SyntheticSpec("t", d=40, n=120, cond=1e4))
+    return X, y
+
+
+# --------------------------------------------------------------------------
+# s=1 == the classical algorithm (independent reference)
+# --------------------------------------------------------------------------
+
+def _classical_bcd(X, y, lam, b, iters, idx):
+    """Algorithm 1, hand-rolled: materialized panel, explicit solve."""
+    d, n = X.shape
+    w = jnp.zeros((d,), X.dtype)
+    alpha = jnp.zeros((n,), X.dtype)
+    for h in range(iters):
+        i = idx[h]
+        Y = X[i, :]
+        Gamma = Y @ Y.T / n + lam * jnp.eye(b, dtype=X.dtype)
+        r = Y @ (y - alpha) / n - lam * w[i]
+        dw = jnp.linalg.solve(Gamma, r)
+        w = w.at[i].add(dw)
+        alpha = alpha + Y.T @ dw
+    return w, alpha
+
+
+def _classical_bdcd(X, y, lam, b, iters, idx):
+    """Algorithm 3, hand-rolled."""
+    d, n = X.shape
+    alpha = jnp.zeros((n,), X.dtype)
+    w = jnp.zeros((d,), X.dtype)
+    for h in range(iters):
+        i = idx[h]
+        Y = X[:, i]
+        Theta = Y.T @ Y / (lam * n * n) + jnp.eye(b, dtype=X.dtype) / n
+        rhs = (Y.T @ w - alpha[i] - y[i]) / n
+        da = jnp.linalg.solve(Theta, rhs)
+        alpha = alpha.at[i].add(da)
+        w = w - Y @ da / (lam * n)
+    return w, alpha
+
+
+def test_engine_s1_is_classical_bcd(problem):
+    X, y = problem
+    idx = sample_blocks(jax.random.key(1), X.shape[0], 4, 20)
+    res = s_step_solve("primal", SolverPlan(b=4, s=1), X, y, LAM, 20,
+                       None, idx=idx)
+    w_ref, al_ref = _classical_bcd(X, y, LAM, 4, 20, idx)
+    np.testing.assert_allclose(res.w, w_ref, rtol=0, atol=1e-12)
+    np.testing.assert_allclose(res.alpha, al_ref, rtol=0, atol=1e-12)
+
+
+def test_engine_s1_is_classical_bdcd(problem):
+    X, y = problem
+    idx = sample_blocks(jax.random.key(2), X.shape[1], 4, 20)
+    res = s_step_solve("dual", SolverPlan(b=4, s=1), X, y, LAM, 20,
+                       None, idx=idx)
+    w_ref, al_ref = _classical_bdcd(X, y, LAM, 4, 20, idx)
+    np.testing.assert_allclose(res.w, w_ref, rtol=0, atol=1e-12)
+    np.testing.assert_allclose(res.alpha, al_ref, rtol=0, atol=1e-12)
+
+
+def test_wrappers_are_the_engine_bit_for_bit(problem):
+    """bcd/bdcd delegate to s_step_solve with NO numerical detour."""
+    X, y = problem
+    idx = sample_blocks(jax.random.key(3), X.shape[0], 4, 16)
+    r_wrap = bcd(X, y, LAM, 4, 16, None, idx=idx)
+    r_eng = s_step_solve("primal", SolverPlan(b=4, s=1), X, y, LAM, 16,
+                         None, idx=idx)
+    assert np.array_equal(np.asarray(r_wrap.w), np.asarray(r_eng.w))
+    assert np.array_equal(np.asarray(r_wrap.alpha), np.asarray(r_eng.alpha))
+
+    idx2 = sample_blocks(jax.random.key(4), X.shape[1], 4, 16)
+    r_wrap2 = bdcd(X, y, LAM, 4, 16, None, idx=idx2)
+    r_eng2 = s_step_solve("dual", SolverPlan(b=4, s=1), X, y, LAM, 16,
+                          None, idx=idx2)
+    assert np.array_equal(np.asarray(r_wrap2.w), np.asarray(r_eng2.w))
+    assert np.array_equal(np.asarray(r_wrap2.alpha), np.asarray(r_eng2.alpha))
+
+
+# --------------------------------------------------------------------------
+# Wrapper back-compat
+# --------------------------------------------------------------------------
+
+def test_wrapper_backcompat_signatures(problem):
+    """The PR-2 call shapes keep working: positional core args, keyword
+    extras, SolveResult fields, per-iteration history lengths."""
+    X, y = problem
+    res = bcd(X, y, LAM, 8, 12, jax.random.key(5))
+    assert res._fields == ("w", "alpha", "history")
+    assert res.w.shape == (X.shape[0],) and res.alpha.shape == (X.shape[1],)
+    assert res.history["objective"].shape == (12,)
+
+    res = ca_bcd(X, y, LAM, 4, 3, 12, jax.random.key(6), track_cond=True)
+    assert res.history["objective"].shape == (12,)
+    assert res.history["gram_cond"].shape == (12,)
+
+    res = ca_bdcd(X, y, LAM, 4, 3, 12, jax.random.key(7),
+                  w_ref=jnp.ones((X.shape[0],), X.dtype))
+    assert res.history["sol_err"].shape == (12,)
+
+
+def test_warm_start_matches_continuation(problem):
+    """w0 warm start == running the first half then the second half."""
+    X, y = problem
+    idx = sample_blocks(jax.random.key(8), X.shape[0], 4, 20)
+    full = bcd(X, y, LAM, 4, 20, None, idx=idx)
+    half = bcd(X, y, LAM, 4, 10, None, idx=idx[:10])
+    rest = bcd(X, y, LAM, 4, 10, None, idx=idx[10:], w0=half.w)
+    np.testing.assert_allclose(rest.w, full.w, rtol=1e-11, atol=1e-13)
+
+    idx2 = sample_blocks(jax.random.key(9), X.shape[1], 4, 20)
+    full2 = bdcd(X, y, LAM, 4, 20, None, idx=idx2)
+    half2 = bdcd(X, y, LAM, 4, 10, None, idx=idx2[:10])
+    rest2 = bdcd(X, y, LAM, 4, 10, None, idx=idx2[10:], alpha0=half2.alpha)
+    np.testing.assert_allclose(rest2.w, full2.w, rtol=1e-11, atol=1e-13)
+
+
+# --------------------------------------------------------------------------
+# Ragged iters % s != 0 (the former ValueError)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("iters,s", [(10, 4), (7, 3), (3, 8), (25, 25)])
+def test_ragged_ca_bcd_matches_classical(problem, iters, s):
+    X, y = problem
+    idx = sample_blocks(jax.random.key(10), X.shape[0], 4, iters)
+    r_cl = bcd(X, y, LAM, 4, iters, None, idx=idx)
+    r_ca = ca_bcd(X, y, LAM, 4, s, iters, None, idx=idx)
+    np.testing.assert_allclose(r_ca.w, r_cl.w, rtol=1e-11, atol=1e-13)
+    np.testing.assert_allclose(r_ca.alpha, r_cl.alpha, rtol=1e-11, atol=1e-13)
+    np.testing.assert_allclose(r_ca.history["objective"],
+                               r_cl.history["objective"], rtol=1e-9, atol=0)
+
+
+@pytest.mark.parametrize("iters,s", [(10, 4), (5, 2)])
+def test_ragged_ca_bdcd_matches_classical(problem, iters, s):
+    X, y = problem
+    idx = sample_blocks(jax.random.key(11), X.shape[1], 4, iters)
+    r_cl = bdcd(X, y, LAM, 4, iters, None, idx=idx)
+    r_ca = ca_bdcd(X, y, LAM, 4, s, iters, None, idx=idx)
+    np.testing.assert_allclose(r_ca.w, r_cl.w, rtol=1e-11, atol=1e-13)
+    np.testing.assert_allclose(r_ca.alpha, r_cl.alpha, rtol=1e-11, atol=1e-13)
+
+
+def test_idx_length_mismatch_rejected(problem):
+    """An explicit idx must cover exactly (iters, b) -- the pre-engine CA
+    solvers raised via their reshape; the engine keeps that contract instead
+    of silently running idx's own length."""
+    X, y = problem
+    idx = sample_blocks(jax.random.key(20), X.shape[0], 4, 8)
+    with pytest.raises(ValueError, match="does not match"):
+        ca_bcd(X, y, LAM, 4, 2, 16, None, idx=idx)
+    with pytest.raises(ValueError, match="does not match"):
+        bcd(X, y, LAM, 8, 8, None, idx=idx)   # b mismatch
+
+
+def test_ragged_track_cond_history_length(problem):
+    """gram_cond spans main scan + ragged tail: one entry per inner iter."""
+    X, y = problem
+    res = ca_bcd(X, y, LAM, 4, 4, 10, jax.random.key(12), track_cond=True)
+    assert res.history["gram_cond"].shape == (10,)
+    assert np.all(np.isfinite(res.history["gram_cond"]))
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+def test_registry_complete():
+    reg = registered_solvers()
+    for form in FORMULATIONS:
+        for backend in ("local", "sharded"):
+            assert (form, backend) in reg
+    with pytest.raises(KeyError, match="no solver registered"):
+        get_solver("kernelized", "local")
+
+
+@pytest.mark.parametrize("form", ["primal", "dual"])
+def test_registry_ref_vs_interpret(problem, form):
+    """ref-vs-pallas_interpret equivalence straight through the registry
+    (ragged s so the tail also runs both backends)."""
+    X, y = problem
+    solve = get_solver(form, "local")
+    dim = X.shape[0] if form == "primal" else X.shape[1]
+    idx = sample_blocks(jax.random.key(13), dim, 4, 10)
+    r_ref = solve(X, y, LAM, 4, 4, 10, None, idx=idx, impl="ref")
+    r_pi = solve(X, y, LAM, 4, 4, 10, None, idx=idx, impl="pallas_interpret")
+    np.testing.assert_allclose(r_pi.w, r_ref.w, rtol=0, atol=1e-10)
+    np.testing.assert_allclose(r_pi.alpha, r_ref.alpha, rtol=0, atol=1e-10)
+    np.testing.assert_allclose(r_pi.history["objective"],
+                               r_ref.history["objective"], rtol=1e-10, atol=0)
+
+
+# --------------------------------------------------------------------------
+# SolverPlan -> PacketPlan collapse
+# --------------------------------------------------------------------------
+
+def test_solver_plan_packet():
+    plan = SolverPlan(b=8, s=4, impl="ref", tiles=(16, 256))
+    assert plan.packet == PacketPlan(impl="ref", bm=16, bk=256)
+    assert SolverPlan(b=8).packet == PacketPlan()
+    assert PacketPlan.make(impl="pallas") == PacketPlan(impl="pallas")
+
+
+def test_packet_plan_explicit_kwargs_win(problem):
+    """A per-call impl/bm/bk overrides the plan's bundled defaults."""
+    from repro.core import gram_packet_sampled
+    X, y = problem
+    flat = jnp.arange(8, dtype=jnp.int32)
+    u = jnp.ones((X.shape[1],), X.dtype)
+    plan = PacketPlan(impl="ref")
+    G0, r0 = gram_packet_sampled(X, flat, u, plan=plan)
+    G1, r1 = gram_packet_sampled(X, flat, u, plan=plan,
+                                 impl="pallas_interpret")
+    np.testing.assert_allclose(G1, G0, rtol=0, atol=1e-10)
+    np.testing.assert_allclose(r1, r0, rtol=0, atol=1e-10)
+    with pytest.raises(ValueError, match="unknown gram impl"):
+        gram_packet_sampled(X, flat, u, plan=PacketPlan(impl="cuda"))
