@@ -1,10 +1,15 @@
-.PHONY: test test-fast bench bench-smoke
+.PHONY: test test-all test-fast bench bench-smoke
 
 # Tier-1 verify (ROADMAP.md): the full suite, fail-fast.
 test:
 	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m pytest -x -q
 
-# Skip the slow multi-device integration checks (marker registered in pytest.ini).
+# The full suite including every slow-marked case, not fail-fast -- the
+# long-form complement of the CI PR gate (which runs `-m "not slow"`).
+test-all:
+	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m pytest -q
+
+# Skip the slow cases (marker registered in pytest.ini): the CI PR gate.
 test-fast:
 	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m pytest -x -q -m "not slow"
 

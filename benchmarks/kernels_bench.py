@@ -39,9 +39,9 @@ def _blas3_rows(impl: str, n: int, b: int, s: int) -> list[str]:
     us_cl = timed(classical, A_small, u)
     us_ca = timed(ca, A_big, u)
     rows.append(row("kernels/gram_classical_sx_bxb", us_cl,
-                    f"s={s} b={b} n={n}"))
+                    f"impl={impl} s={s} b={b} n={n}"))
     rows.append(row("kernels/gram_ca_one_sbxsb", us_ca,
-                    f"blas3_speedup={us_cl/us_ca:.2f}x"))
+                    f"impl={impl} blas3_speedup={us_cl/us_ca:.2f}x"))
     return rows
 
 
@@ -68,13 +68,22 @@ def _panel_free_rows(impl: str, d: int, n: int, sb: int) -> list[str]:
     us_fused = timed(fused, X, flat, u, v)
     bm = tuning.pick_tiles(sb, n, jnp.float32)[0]
     traffic = packet_traffic_breakdown(sb, n, itemsize=4, bm=bm)
+    # Off-TPU the wall number is a ref-proxy, not the kernel's claim: the ref
+    # backend gathers the panel twice on the fused path (once inside the
+    # sampled packet, once inside panel_apply) where the baseline gathers it
+    # once and reuses Y, so wall_speedup < 1x here is expected.  The 2x win
+    # is the modeled HBM-traffic ratio, which only the DMA-gathering Pallas
+    # kernel on real TPU realizes as wall clock.
+    wall = f"wall_speedup={us_base/us_fused:.2f}x"
+    if impl != "pallas":
+        wall += " wall=ref-proxy(traffic-model-only)"
     rows = [
         row("kernels/sampled_packet_baseline", us_base,
-            f"sb={sb} n={n} hbm_bytes={traffic['baseline_bytes']:.0f}"),
+            f"impl={impl} sb={sb} n={n} "
+            f"hbm_bytes={traffic['baseline_bytes']:.0f}"),
         row("kernels/sampled_packet_fused", us_fused,
-            f"hbm_bytes={traffic['panel_free_bytes']:.0f} "
-            f"hbm_ratio={traffic['ratio']:.3f} "
-            f"wall_speedup={us_base/us_fused:.2f}x"),
+            f"impl={impl} hbm_bytes={traffic['panel_free_bytes']:.0f} "
+            f"hbm_ratio={traffic['ratio']:.3f} " + wall),
     ]
     return rows
 
@@ -103,5 +112,5 @@ def run(impl: str | None = None, smoke: bool = False) -> list[str]:
     us_pi = timed(lambda: gram_packet(A, u2, scale=1.0 / n,
                                       impl="pallas_interpret"), iters=1)
     rows.append(row("kernels/gram_pallas_interpret_2k", us_pi,
-                    "correctness-path only (CPU)"))
+                    "impl=pallas_interpret correctness-path only (CPU)"))
     return rows

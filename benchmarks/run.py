@@ -10,6 +10,10 @@ kernel benches on tiny shapes in ref/interpret mode and writes a
 ``BENCH_smoke.json`` baseline -- wall microseconds per row plus the modeled
 HBM bytes/iteration of the panel-free packet vs the gather-then-pack
 baseline -- so regressions in either show up as a diff from this PR onward.
+Each row records its ``impl``; off-TPU the fused sampled-packet row is
+labeled ``wall=ref-proxy`` (the ref backend gathers the panel twice, so its
+wall number is not the kernel's wall-clock claim -- only the modeled HBM
+ratio is).
 """
 from __future__ import annotations
 
@@ -21,7 +25,7 @@ import time
 import traceback
 
 MODULES = ["table1", "table2", "fig2_3", "fig4", "fig5_6", "fig7", "fig8_9",
-           "kernels_bench", "gram_autotune", "roofline_bench"]
+           "kernels_bench", "prox_bench", "gram_autotune", "roofline_bench"]
 SMOKE_MODULES = ["kernels_bench", "gram_autotune"]
 SMOKE_OUT = os.path.join(os.path.dirname(__file__), os.pardir,
                          "BENCH_smoke.json")
@@ -53,6 +57,8 @@ def _run_modules(mods, impl, smoke):
 
 
 def _write_smoke_baseline(rows, impl, path=SMOKE_OUT):
+    import re
+
     import jax.numpy as jnp
 
     from repro.core.cost_model import packet_traffic_breakdown
@@ -65,7 +71,13 @@ def _write_smoke_baseline(rows, impl, path=SMOKE_OUT):
     parsed = []
     for line in rows:
         name, us, derived = line.split(",", 2)
+        # Per-row impl (rows embed "impl=<backend>" in their derived field;
+        # e.g. the interpret-mode reference row differs from the harness-wide
+        # impl), so the regression gate can tell a wall-clock claim from a
+        # ref-proxy of the traffic model.
+        m = re.search(r"impl=(\S+)", derived)
         parsed.append({"name": name, "us_per_call": float(us),
+                       "impl": m.group(1) if m else impl,
                        "derived": derived})
     baseline = {
         "impl": impl,

@@ -1,0 +1,67 @@
+"""Sparse recovery with CA proximal BCD (elastic net) -- the third formulation.
+
+Solves   min_w 1/(2n) ||X^T w - y||^2 + lam/2 ||w||^2 + lam1 ||w||_1
+through the same s-step engine as the ridge solvers (arXiv:1712.06047):
+ONE sb x sb Gram packet per outer iteration, soft-threshold inside the inner
+recurrence.  Shows
+  1. identical trajectories for s=1 and s>1 (the CA claim survives the
+     nonsmooth term), and
+  2. support recovery: lam1 drives most coordinates to EXACT zeros while the
+     communication count drops by s.
+
+Run:  PYTHONPATH=src python examples/lasso.py [--impl ref|pallas|pallas_interpret]
+"""
+import argparse
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import elastic_net_objective, get_solver, sample_blocks  # noqa: E402
+
+
+def main(impl: str | None = None):
+    solve = get_solver("proximal", "local")
+    d, n, k = 256, 1024, 16                    # k-sparse ground truth
+    key = jax.random.key(0)
+    X = jax.random.normal(key, (d, n), jnp.float64)
+    w_true = jnp.zeros((d,)).at[jnp.arange(k) * (d // k)].set(1.0)
+    y = X.T @ w_true + 0.02 * jax.random.normal(jax.random.key(1), (n,))
+    lam = 1e-4
+    lam1 = 0.1 * float(jnp.max(jnp.abs(X @ y)) / n)
+    print(f"problem: X {X.shape}, ||w_true||_0 = {k}, "
+          f"lam={lam:.1e}, lam1={lam1:.3e}")
+
+    iters, b, s = 600, 8, 20
+    idx = sample_blocks(jax.random.key(2), d, b, iters)
+
+    res_cl = solve(X, y, lam, b, 1, iters, None, idx=idx, lam1=lam1, impl=impl)
+    res_ca = solve(X, y, lam, b, s, iters, None, idx=idx, lam1=lam1, impl=impl)
+
+    dev = np.max(np.abs(np.asarray(res_ca.history["objective"]) -
+                        np.asarray(res_cl.history["objective"])))
+    nnz = int(res_ca.history["nnz"][-1])
+    support = np.flatnonzero(np.asarray(res_ca.w))
+    true_support = np.flatnonzero(np.asarray(w_true))
+    print(f"\nPBCD     : {iters} iterations -> {iters} synchronizations")
+    print(f"CA-PBCD  : {iters} iterations -> {iters//s} synchronizations "
+          f"(s={s}, soft-threshold inside the inner recurrence)")
+    print(f"max |objective difference| over the trajectory: {dev:.2e}")
+    print(f"final objective: "
+          f"{float(elastic_net_objective(X, res_ca.w, y, lam, lam1)):.4e}")
+    print(f"sparsity: {nnz}/{d} nonzeros (true support {k}); "
+          f"recovered {len(np.intersect1d(support, true_support))}/{k} "
+          f"true coordinates")
+    assert dev < 1e-8, "CA-PBCD must match classical proximal BCD exactly"
+    assert nnz < d // 2, "lam1 at this level must produce a sparse iterate"
+    print("\nsame iterates, exact zeros, 1/s the synchronizations.")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--impl", default=None,
+                    help="Gram-packet backend: ref | pallas | pallas_interpret")
+    main(ap.parse_args().impl)

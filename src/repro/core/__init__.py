@@ -3,10 +3,14 @@ dual block coordinate descent (CA-BCD / CA-BDCD) for regularized least squares,
 plus the baselines it is compared against (CG, TSQR) and the alpha-beta-gamma
 cost model used for the modeled scaling experiments."""
 from .engine import (FORMULATIONS, DualRidge, Formulation, PrimalRidge,
-                     SolveResult, SolverPlan, get_solver, register_solver,
-                     registered_solvers, s_step_solve, s_step_solve_sharded)
+                     SolveResult, SolverPlan, get_solver, register_formulation,
+                     register_solver, registered_solvers, s_step_solve,
+                     s_step_solve_sharded)
 from .bcd import bcd, ca_bcd, objective
 from .bdcd import bdcd, ca_bdcd
+from .proximal import (ProximalElasticNet, ca_proximal_bcd,
+                       ca_proximal_bcd_sharded, elastic_net_objective,
+                       proximal_bcd, proximal_bcd_reference)
 from .direct import ridge_exact
 from .distributed import (bcd_sharded, bdcd_sharded, ca_bcd_sharded,
                           ca_bdcd_sharded, lower_solver, make_solver_mesh)
@@ -17,7 +21,9 @@ from repro.kernels.gram import (PacketPlan, gram, gram_packet,
                                 panel_apply, panel_matvec)
 from .krylov import cg_ridge, cg_ridge_history
 from .sampling import overlap_matrix, sample_blocks, sample_blocks_balanced
-from .subproblem import block_forward_substitution, solve_spd
+from .subproblem import (block_forward_substitution,
+                         block_forward_substitution_prox, soft_threshold,
+                         solve_spd)
 from .tsqr import cholqr_r, tsqr, tsqr_ridge
 from . import cost_model
 
@@ -28,12 +34,16 @@ __all__ = [
     "bcd_sharded", "bdcd_sharded", "ca_bcd_sharded", "ca_bdcd_sharded",
     "lower_solver", "make_solver_mesh",
     "SolverPlan", "PacketPlan", "Formulation", "PrimalRidge", "DualRidge",
-    "FORMULATIONS", "s_step_solve", "s_step_solve_sharded", "get_solver",
+    "ProximalElasticNet", "FORMULATIONS", "s_step_solve",
+    "s_step_solve_sharded", "get_solver", "register_formulation",
     "register_solver", "registered_solvers",
+    "proximal_bcd", "ca_proximal_bcd", "ca_proximal_bcd_sharded",
+    "proximal_bcd_reference", "elastic_net_objective",
     "gram", "gram_packet", "gram_packet_sampled", "panel_apply",
     "panel_matvec", "normal_matvec",
     "sample_blocks", "sample_blocks_balanced", "overlap_matrix",
-    "block_forward_substitution", "solve_spd",
+    "block_forward_substitution", "block_forward_substitution_prox",
+    "soft_threshold", "solve_spd",
     "CollectiveSummary", "collective_summary", "count_in_compiled",
     "parse_collectives", "cost_model",
 ]

@@ -150,15 +150,16 @@ def lower_solver(solver, mesh: Mesh, d: int, n: int, lam: float, b: int, s: int,
                  iters: int, *, axis: str = "shards", fuse_packet: bool = True,
                  dtype=jnp.float32, col_sharded: bool | None = None,
                  unroll: int = 1, impl: str | None = None,
-                 tiles: tuple[int, int] | None = None):
+                 tiles: tuple[int, int] | None = None, **solver_kw):
     """Lower+compile a solver on abstract operands; returns the Compiled object
     (for HLO collective counting and roofline terms).  ``solver`` is a
-    formulation name from the registry (``"primal"`` / ``"dual"``) or one of
-    the sharded entry points above (back-compat).  Input shardings are derived
-    from the formulation's layout; ``col_sharded`` is retained for callers
-    that pin it explicitly.  ``impl`` and ``tiles`` (explicit kernel (bm, bk),
-    overriding the autotuned pick) are forwarded to the solver's Gram-packet
-    dispatch."""
+    formulation name from the registry (``"primal"`` / ``"dual"`` /
+    ``"proximal"``) or one of the sharded solver entry points (back-compat).
+    Input shardings are derived from the formulation's layout; ``col_sharded``
+    is retained for callers that pin it explicitly.  ``impl`` and ``tiles``
+    (explicit kernel (bm, bk), overriding the autotuned pick) are forwarded to
+    the solver's Gram-packet dispatch; any extra ``solver_kw`` (e.g. the
+    proximal formulation's ``lam1``) ride through to the solver entry."""
     from jax.sharding import NamedSharding
     formulation = _resolve_formulation(solver)
     solve = get_solver(formulation, "sharded")
@@ -178,6 +179,6 @@ def lower_solver(solver, mesh: Mesh, d: int, n: int, lam: float, b: int, s: int,
         return solve(mesh, Xv, yv, lam, b, s, iters,
                      jax.random.wrap_key_data(keyv), axis=axis,
                      fuse_packet=fuse_packet, unroll=unroll, impl=impl,
-                     tiles=tiles)
+                     tiles=tiles, **solver_kw)
 
     return jax.jit(run).lower(X, y, key).compile()

@@ -29,11 +29,14 @@ outer iteration through the same body with ``s_k = iters % s`` -- the CA
 identity holds for any grouping of the index stream, so the iterates still
 match the classical schedule bit-for-bit in exact arithmetic.
 
-New formulations (the proximal/sparse methods of arXiv:1712.06047, the kernel
-BDCD of arXiv:2406.18001) plug in by implementing the Formulation hooks and
-registering under a name -- no new loop, no new shard_map.  The registry
-(:func:`register_solver` / :func:`get_solver`, keyed on ``(formulation,
-backend)``) is how launch scripts, benchmarks, and examples select solvers.
+New formulations plug in by implementing the Formulation hooks and
+registering under a name -- no new loop, no new shard_map.  The proximal
+elastic-net methods of arXiv:1712.06047 are ``repro.core.proximal`` (the
+first formulation added *through* the registry; its nonsmooth update rides
+the ``inner_sweep`` hook); the kernel BDCD of arXiv:2406.18001 is the next
+candidate.  The registry (:func:`register_solver` / :func:`get_solver`,
+keyed on ``(formulation, backend)``) is how launch scripts, benchmarks, and
+examples select solvers.
 """
 from __future__ import annotations
 
@@ -47,7 +50,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
 from repro.kernels.gram import PacketPlan, gram_packet_sampled, panel_apply
-from repro.kernels.gram.ops import _pad_axis
+from repro.kernels.gram.ops import _check_positive_int, _pad_axis
 
 from .sampling import overlap_matrix, sample_blocks
 from .subproblem import block_forward_substitution
@@ -79,6 +82,17 @@ class SolverPlan:
     unroll: int = 1
     track_cond: bool = False
 
+    def __post_init__(self):
+        # Fail fast at plan construction: a typo'd impl or a zero tile would
+        # otherwise only surface at the first kernel call inside the jitted
+        # scan (or, worse, silently fall through to the autotuned tiles).
+        for name in ("b", "s", "unroll"):
+            _check_positive_int(f"SolverPlan.{name}", getattr(self, name))
+        if self.tiles is not None and len(self.tiles) != 2:
+            raise ValueError(
+                f"SolverPlan.tiles={self.tiles!r} must be a (bm, bk) pair")
+        self.packet  # PacketPlan.make validates impl and the tile values
+
     @property
     def packet(self) -> PacketPlan:
         return PacketPlan.make(impl=self.impl, tiles=self.tiles)
@@ -94,6 +108,14 @@ class BoundFormulation(Protocol):
     also the coefficient of the duplicate-index overlap term, which is why a
     single scalar serves both the fused local diagonal and the post-reduce
     correction.
+
+    ``inner_sweep`` owns the subproblem solve: given the replicated
+    ``sb x sb`` system ``A`` and right-hand side ``base`` it returns the
+    ``sb`` applied block updates.  The ridge formulations delegate to
+    :func:`~repro.core.subproblem.block_forward_substitution`; nonsmooth
+    formulations (the proximal elastic net) run the prox-aware variant --
+    the hook exists precisely so a formulation can reshape each block's
+    applied step without touching the engine's one hot-loop body.
     """
     operand: jax.Array
 
@@ -106,6 +128,9 @@ class BoundFormulation(Protocol):
     def init_carry(self, axes: tuple | None = None) -> tuple: ...
     def packet_vector(self, carry) -> jax.Array: ...
     def base(self, r: jax.Array, carry, flat: jax.Array) -> jax.Array: ...
+    def inner_sweep(self, A: jax.Array, base: jax.Array, s_k: int, b: int,
+                    flat: jax.Array, carry,
+                    overlap: jax.Array | None) -> jax.Array: ...
     def update(self, carry, idx: jax.Array, dx: jax.Array,
                pp: PacketPlan) -> tuple: ...
     def metrics(self, carry) -> dict: ...
@@ -190,6 +215,9 @@ class _BoundPrimal:
 
     def base(self, r, carry, flat):
         return r - self.lam * carry[0][flat]               # Eq. (7)/(8) rhs
+
+    def inner_sweep(self, A, base, s_k, b, flat, carry, overlap=None):
+        return block_forward_substitution(A, base, s_k, b)
 
     def update(self, carry, idx, dx, pp):
         w, alpha = carry
@@ -288,6 +316,9 @@ class _BoundDual:
         w, alpha = carry
         return (u - alpha[flat] - self.y[flat]) / self.n   # Eq. (17)/(18)
 
+    def inner_sweep(self, A, base, s_k, b, flat, carry, overlap=None):
+        return block_forward_substitution(A, base, s_k, b)
+
     def update(self, carry, idx, dx, pp):
         w, alpha = carry
         alpha = alpha.at[idx].add(dx)                      # Eq. (20)
@@ -341,6 +372,15 @@ FORMULATIONS: dict[str, Formulation] = {
     "primal": PrimalRidge(),
     "dual": DualRidge(),
 }
+
+
+def register_formulation(form: Formulation) -> Formulation:
+    """Publish a Formulation under its ``name`` so the string-keyed entry
+    points (``s_step_solve(\"proximal\", ...)``, ``lower_solver``, the
+    benchmark harness) can resolve it.  New formulations call this next to
+    their ``register_solver`` entries (e.g. ``repro.core.proximal``)."""
+    FORMULATIONS[form.name] = form
+    return form
 
 
 # --------------------------------------------------------------------------
@@ -420,16 +460,18 @@ def _outer_step(bound: BoundFormulation, plan: SolverPlan, s_k: int, carry,
                                  reg=0.0 if dist else bound.reg, plan=pp)
     G, r = _packet_reduce(Gl, rl, axis, plan.fuse_packet)
     if dist:
-        A = G + bound.reg * overlap_matrix(flat).astype(dtype)
-    elif s_k == 1:
-        A = G           # a single block has no cross-block overlap terms
-    else:
         O = overlap_matrix(flat).astype(dtype)             # shared-seed trick
+        A = G + bound.reg * O
+    elif s_k == 1:
+        O = None        # a single block has no cross-block overlap terms
+        A = G
+    else:
+        O = overlap_matrix(flat).astype(dtype)
         # reg is already on G's diagonal; add only the off-diagonal
         # duplicate-index overlap terms (O's diagonal is exactly 1).
         A = G + bound.reg * (O - jnp.eye(sb, dtype=dtype))
     base = bound.base(r, carry, flat)
-    dxs = block_forward_substitution(A, base, s_k, b)
+    dxs = bound.inner_sweep(A, base, s_k, b, flat, carry, O)
 
     if not collect:
         # Fast path (distributed): apply all s_k blocks in one deferred
@@ -447,6 +489,21 @@ def _outer_step(bound: BoundFormulation, plan: SolverPlan, s_k: int, carry,
         # G already carries the regularized diagonal (local packet reg).
         hist["gram_cond"] = jnp.full((s_k,), jnp.linalg.cond(G))
     return carry, hist
+
+
+def _resolve_form(formulation) -> "Formulation":
+    """Resolve a formulation name (or pass an instance through), pulling in
+    the sibling modules that self-register on first use."""
+    if not isinstance(formulation, str):
+        return formulation
+    if formulation not in FORMULATIONS:
+        from . import bcd, bdcd, distributed, proximal  # noqa: F401
+    try:
+        return FORMULATIONS[formulation]
+    except KeyError:
+        raise KeyError(
+            f"unknown formulation {formulation!r}; "
+            f"available: {sorted(FORMULATIONS)}") from None
 
 
 def _check_idx(idx, iters: int, b: int) -> None:
@@ -503,7 +560,7 @@ def s_step_solve(formulation: Formulation | str, plan: SolverPlan,
     dual).  ``idx`` overrides the sampled index stream -- the classical and
     CA runs that share it produce identical iterates in exact arithmetic.
     """
-    form = FORMULATIONS[formulation] if isinstance(formulation, str) else formulation
+    form = _resolve_form(formulation)
     d, n = X.shape
     if idx is None:
         idx = sample_blocks(key, form.sample_dim(d, n), plan.b, iters)
@@ -524,7 +581,7 @@ def s_step_solve_sharded(formulation: Formulation | str, plan: SolverPlan,
     iteration) and the skipped metric reconstruction.  Returns ``(w, alpha)``
     with the formulation's output sharding.
     """
-    form = FORMULATIONS[formulation] if isinstance(formulation, str) else formulation
+    form = _resolve_form(formulation)
     d, n = X.shape
     if idx is None:
         idx = sample_blocks(key, form.sample_dim(d, n), plan.b, iters)
@@ -571,7 +628,7 @@ def get_solver(formulation: str, backend: str = "local") -> Callable:
         # The built-in entries are registered by the sibling wrapper modules
         # at import; pull them in lazily so `from repro.core.engine import
         # get_solver` works without the package __init__ having run first.
-        from . import bcd, bdcd, distributed  # noqa: F401
+        from . import bcd, bdcd, distributed, proximal  # noqa: F401
     try:
         return _REGISTRY[(formulation, backend)]
     except KeyError:

@@ -30,30 +30,41 @@ import jax.numpy as jnp
 MODES = ("global_uniform", "shard_balanced")
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2, 3))
-def _sample_one(key: jax.Array, n_total: int, b: int, mode: str) -> jax.Array:
-    if mode == "global_uniform":
-        return jax.random.choice(key, n_total, (b,), replace=False)
-    # shard_balanced handled by sample_blocks_balanced (needs P); keep the
-    # single-shard fallback identical to global_uniform.
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _sample_one(key: jax.Array, n_total: int, b: int) -> jax.Array:
     return jax.random.choice(key, n_total, (b,), replace=False)
 
 
 def sample_blocks(key: jax.Array, n_total: int, b: int, iters: int,
-                  mode: str = "global_uniform") -> jax.Array:
+                  mode: str = "global_uniform", *,
+                  n_shards: int | None = None) -> jax.Array:
     """Sample ``iters`` coordinate blocks of size ``b`` from ``[n_total]``.
 
     Returns int32 ``(iters, b)``.  Within a row: no replacement.  Across rows:
     independent draws (the paper's scheme).  Deterministic in ``key`` -- the
     CA variants re-use the *same* index stream as the classical ones, which is
     what makes the exact-equivalence property testable.
+
+    ``mode="shard_balanced"`` dispatches to :func:`sample_blocks_balanced`
+    and needs the shard count: pass ``n_shards=P``.  (It used to fall back to
+    ``global_uniform`` silently, which defeats the load-balance guarantee the
+    mode exists for.)
     """
     if mode not in MODES:
         raise ValueError(f"unknown sampling mode {mode!r}; expected one of {MODES}")
     if not 1 <= b <= n_total:
         raise ValueError(f"block size b={b} must be in [1, n_total={n_total}]")
+    if mode == "shard_balanced":
+        if n_shards is None:
+            raise ValueError(
+                "mode='shard_balanced' needs the shard count: pass "
+                "n_shards=P (or call sample_blocks_balanced directly); "
+                "refusing to silently fall back to global_uniform")
+        return sample_blocks_balanced(key, n_total, b, iters, n_shards)
+    if n_shards is not None:
+        raise ValueError("n_shards only applies to mode='shard_balanced'")
     keys = jax.random.split(key, iters)
-    idx = jax.vmap(lambda k: _sample_one(k, n_total, b, mode))(keys)
+    idx = jax.vmap(lambda k: _sample_one(k, n_total, b))(keys)
     return idx.astype(jnp.int32)
 
 
@@ -73,7 +84,10 @@ def sample_blocks_balanced(key: jax.Array, n_total: int, b: int, iters: int,
         raise ValueError(f"n_total={n_total} must be divisible by n_shards={n_shards}")
     per = b // n_shards
     shard_len = n_total // n_shards
-    keys = jax.random.split(key, iters * n_shards).reshape(iters, n_shards, 2)
+    # reshape keeps the trailing key dims so both typed keys (scalar
+    # elements) and raw uint32 keys (trailing (2,)) work.
+    keys = jax.random.split(key, iters * n_shards)
+    keys = keys.reshape(iters, n_shards, *keys.shape[1:])
 
     def one_iter(ks):
         local = jax.vmap(

@@ -38,6 +38,7 @@ as a bundle of defaults (DESIGN.md section 5.3).
 from __future__ import annotations
 
 import dataclasses
+import operator
 
 import jax
 import jax.numpy as jnp
@@ -59,10 +60,20 @@ class PacketPlan:
     The solver engine builds one plan per solve and hands it to every
     ``gram_packet_sampled`` / ``panel_apply`` call in the hot loop, replacing
     the per-call ``impl=``/``tiles=`` threading of PRs 1-2.
+
+    Knobs are validated here, at construction: a typo'd ``impl`` or a
+    zero/negative tile fails fast with the accepted set instead of erroring
+    at the first kernel call inside a jitted scan.
     """
     impl: str | None = None
     bm: int | None = None
     bk: int | None = None
+
+    def __post_init__(self):
+        if self.impl is not None:
+            _check_impl(self.impl)
+        for name in ("bm", "bk"):
+            _check_tile(name, getattr(self, name))
 
     @classmethod
     def make(cls, impl: str | None = None,
@@ -70,14 +81,40 @@ class PacketPlan:
         """Build from the public solver knobs (``impl``, ``tiles=(bm, bk)``)."""
         if tiles is None:
             return cls(impl=impl)
+        if len(tiles) != 2:
+            raise ValueError(f"tiles={tiles!r} must be a (bm, bk) pair")
         return cls(impl=impl, bm=tiles[0], bk=tiles[1])
 
 
+def _check_positive_int(name: str, v) -> None:
+    """Shared fail-fast knob check (PacketPlan tiles, SolverPlan b/s/unroll):
+    ints and numpy integers >= 1; bools and floats rejected."""
+    try:
+        iv = operator.index(v)
+    except TypeError:
+        iv = None
+    if isinstance(v, bool) or iv is None or iv < 1:
+        raise ValueError(f"{name}={v!r} must be a positive int")
+
+
+def _check_tile(name: str, v) -> None:
+    """Tiles are positive ints or None (= consult the tuning table); 0 is an
+    error, not "unset" -- it used to falsy-fall-through to the plan's tiles."""
+    if v is not None:
+        _check_positive_int(f"kernel tile {name}", v)
+
+
 def _with_plan(plan: PacketPlan | None, impl, bm, bk):
-    """Resolve per-call knobs against the plan: explicit arguments win."""
+    """Resolve per-call knobs against the plan: explicitly-passed arguments
+    win; only ``None`` means "defer to the plan" (``bm=0`` raises rather than
+    silently resolving to the plan's tile)."""
+    _check_tile("bm", bm)
+    _check_tile("bk", bk)
     if plan is None:
         return impl, bm, bk
-    return impl or plan.impl, bm or plan.bm, bk or plan.bk
+    return (impl if impl is not None else plan.impl,
+            bm if bm is not None else plan.bm,
+            bk if bk is not None else plan.bk)
 
 
 def _pad_axis(x: jax.Array, mult: int, axis: int) -> jax.Array:
@@ -94,7 +131,9 @@ def _auto_impl() -> str:
 
 
 def _check_impl(impl: str) -> None:
-    if impl not in ("pallas", "pallas_interpret"):
+    # Called before the ref/kernel branch in every entry point (and at
+    # PacketPlan construction), so the listed set is the true accepted set.
+    if impl not in _IMPLS:
         raise ValueError(
             f"unknown gram impl {impl!r}; expected one of {_IMPLS}")
 
@@ -127,9 +166,9 @@ def gram_packet(A: jax.Array, u: jax.Array, *, scale: float = 1.0,
     """
     impl, bm, bk = _with_plan(plan, impl, bm, bk)
     impl = impl or _auto_impl()
+    _check_impl(impl)
     if impl == "ref":
         return ref.gram_packet_ref(A, u, scale, reg, scale_r)
-    _check_impl(impl)
     m, n = A.shape
     bm_eff, bk_eff = _tiles(m, n, A.dtype, bm, bk)
     Ap = _pad_axis(_pad_axis(A, bm_eff, 0), bk_eff, 1)
@@ -160,9 +199,9 @@ def gram_packet_sampled(X: jax.Array, flat: jax.Array, u: jax.Array, *,
     """
     impl, bm, bk = _with_plan(plan, impl, bm, bk)
     impl = impl or _auto_impl()
+    _check_impl(impl)
     if impl == "ref":
         return ref.gram_packet_sampled_ref(X, flat, u, scale, reg, scale_r)
-    _check_impl(impl)
     m = flat.shape[0]
     n = X.shape[1]
     bm_eff, bk_eff = _tiles(m, n, X.dtype, bm, bk)
@@ -187,9 +226,9 @@ def panel_apply(X: jax.Array, flat: jax.Array, v: jax.Array, *,
     Padded index slots carry v == 0, so their gathered rows contribute 0."""
     impl, bm, bk = _with_plan(plan, impl, bm, bk)
     impl = impl or _auto_impl()
+    _check_impl(impl)
     if impl == "ref":
         return ref.panel_apply_ref(X, flat, v, scale)
-    _check_impl(impl)
     m = flat.shape[0]
     n = X.shape[1]
     bm_eff, bk_eff = _tiles(m, n, X.dtype, bm, bk)
@@ -208,9 +247,9 @@ def panel_matvec(X: jax.Array, flat: jax.Array, t: jax.Array, *,
     """out(m) = scale * X[flat, :] t, panel-free (the residual direction)."""
     impl, bm, bk = _with_plan(plan, impl, bm, bk)
     impl = impl or _auto_impl()
+    _check_impl(impl)
     if impl == "ref":
         return ref.panel_matvec_ref(X, flat, t, scale)
-    _check_impl(impl)
     m = flat.shape[0]
     n = X.shape[1]
     bm_eff, bk_eff = _tiles(m, n, X.dtype, bm, bk)
@@ -238,9 +277,9 @@ def normal_matvec(X: jax.Array, v: jax.Array, *, lam: float = 0.0,
     """
     impl, bm, bk = _with_plan(plan, impl, bm, bk)
     impl = impl or "ref"
+    _check_impl(impl)
     if impl == "ref":
         return X @ (X.T @ v) * scale + lam * v
-    _check_impl(impl)
     d = X.shape[0]
     rows = jnp.arange(d, dtype=jnp.int32)
     t = panel_apply(X, rows, v, impl=impl, bm=bm, bk=bk)          # X^T v
@@ -257,9 +296,9 @@ def gram(A: jax.Array, *, scale: float = 1.0, reg: float = 0.0,
     packet kernel's u path is never fed, computed, or written)."""
     impl, bm, bk = _with_plan(plan, impl, bm, bk)
     impl = impl or _auto_impl()
+    _check_impl(impl)
     if impl == "ref":
         return ref.gram_ref(A, scale, reg)
-    _check_impl(impl)
     m, n = A.shape
     bm_eff, bk_eff = _tiles(m, n, A.dtype, bm, bk)
     Ap = _pad_axis(_pad_axis(A, bm_eff, 0), bk_eff, 1)

@@ -29,11 +29,16 @@ from repro.core.distributed import lower_solver
 from repro.launch.mesh import make_production_mesh
 
 
-def run(out_dir: str = "artifacts/solver", impl: str | None = None) -> list[dict]:
+def run(out_dir: str = "artifacts/solver", impl: str | None = None,
+        formulation: str = "primal") -> list[dict]:
     os.makedirs(out_dir, exist_ok=True)
     results = []
     d, n = 4096, 1 << 22          # dense 4096 x 4.2M f32 panel (64 GiB), abstract
     b, iters = 8, 8
+    # The proximal formulation's threshold runs on the replicated post-reduce
+    # packet, so its production schedule must be byte-identical to the
+    # primal's; lowering it with lam1 > 0 exercises the prox sweep for real.
+    solver_kw = {"lam1": 1e-3} if formulation == "proximal" else {}
     for mesh_kind in ("single", "multi"):
         mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
         axis = tuple(mesh.axis_names)          # flatten the whole mesh: 1D layout
@@ -41,15 +46,16 @@ def run(out_dir: str = "artifacts/solver", impl: str | None = None) -> list[dict
             if iters % s:
                 continue
             t0 = time.time()
-            comp = lower_solver("primal", mesh, d, n, 1e-3, b, s, iters,
+            comp = lower_solver(formulation, mesh, d, n, 1e-3, b, s, iters,
                                 axis=axis, fuse_packet=fused,
-                                unroll=iters // s, impl=impl)
+                                unroll=iters // s, impl=impl, **solver_kw)
             cs = count_in_compiled(comp)
             ca = comp.cost_analysis()
             if isinstance(ca, list):
                 ca = ca[0]
             rec = {
                 "mesh": mesh_kind, "chips": mesh.size, "s": s, "fused": fused,
+                "formulation": formulation,
                 "iters": iters, "collectives": cs.count,
                 "operand_bytes": cs.operand_bytes, "link_bytes": cs.link_bytes,
                 "flops_per_device": ca.get("flops", 0.0),
@@ -60,7 +66,11 @@ def run(out_dir: str = "artifacts/solver", impl: str | None = None) -> list[dict
                   f"{cs.count} collectives / {iters} iters, "
                   f"{cs.operand_bytes:.2e} B wire, "
                   f"compile {rec['compile_s']}s", flush=True)
-    with open(os.path.join(out_dir, "solver_cells.json"), "w") as f:
+    # Keyed by formulation so a proximal dry-run does not clobber the primal
+    # artifact ("solver_cells.json" keeps its historical name for primal).
+    fname = ("solver_cells.json" if formulation == "primal"
+             else f"solver_cells_{formulation}.json")
+    with open(os.path.join(out_dir, fname), "w") as f:
         json.dump(results, f, indent=1)
     return results
 
@@ -70,5 +80,8 @@ if __name__ == "__main__":
     ap.add_argument("--out", default="artifacts/solver")
     ap.add_argument("--impl", default=None,
                     help="Gram-packet backend: ref | pallas | pallas_interpret")
+    ap.add_argument("--formulation", default="primal",
+                    help="registry formulation to lower: primal | dual | "
+                         "proximal")
     args = ap.parse_args()
-    run(args.out, impl=args.impl)
+    run(args.out, impl=args.impl, formulation=args.formulation)

@@ -50,6 +50,18 @@ def check_solver_equivalence():
     np.testing.assert_allclose(al_r, r_loc.alpha, rtol=1e-11, atol=1e-13)
     np.testing.assert_allclose(w_r, r_cl.w, rtol=1e-11, atol=1e-13)
     # padding path: d=60, n=200 not divisible by 8 -> padded internally (dual)
+
+    # proximal (elastic-net) formulation: the soft-threshold runs on the
+    # replicated post-reduce packet, so sharded == local iterates (ragged s
+    # included) with the l1 term active and real zeros in the result.
+    from repro.core import ca_proximal_bcd, ca_proximal_bcd_sharded
+    lam1 = 0.1 * float(np.max(np.abs(X @ y)) / 200)
+    w_p, al_p = ca_proximal_bcd_sharded(mesh, X, y, lam, 8, 8, 30, None,
+                                        idx=idx3, lam1=lam1)
+    r_p = ca_proximal_bcd(X, y, lam, 8, 8, 30, None, idx=idx3, lam1=lam1)
+    np.testing.assert_allclose(w_p, r_p.w, rtol=1e-11, atol=1e-13)
+    np.testing.assert_allclose(al_p, r_p.alpha, rtol=1e-11, atol=1e-13)
+    assert int(np.sum(np.asarray(w_p) != 0)) < 60, "lam1 must induce zeros"
     print("solver_equivalence OK")
 
 
@@ -96,6 +108,17 @@ def check_collective_counts():
     ca2 = lower_solver(ca_bdcd_sharded, mesh, 256, 64, 1e-3, 8, s, iters,
                        fuse_packet=True, unroll=iters // s, col_sharded=False)
     assert count_in_compiled(cl2).count / count_in_compiled(ca2).count == s
+
+    # proximal path: exactly 1 all-reduce per outer iteration with the
+    # soft-threshold active (lam1 > 0) -- the nonsmooth term runs on the
+    # replicated post-reduce packet and must add ZERO communication.
+    prox = lower_solver("proximal", mesh, 64, 256, 1e-3, 8, s, iters,
+                        fuse_packet=True, unroll=iters // s, lam1=1e-3)
+    n_prox = count_in_compiled(prox).count
+    assert n_prox == iters // s, n_prox
+    prox_cl = lower_solver("proximal", mesh, 64, 256, 1e-3, 8, 1, iters,
+                           fuse_packet=False, unroll=iters, lam1=1e-3)
+    assert count_in_compiled(prox_cl).count == iters
 
     # bandwidth grows ~s per Table 1: CA op moves ~s^2 b^2 vs s * b^2 words
     b_cl = count_in_compiled(cl).operand_bytes

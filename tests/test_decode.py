@@ -21,7 +21,13 @@ def _f32(arch):
                                param_dtype=jnp.float32)
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+# jamba's prefill+decode comparison is the file's slowest case (~17s on CPU);
+# the PR gate runs `-m "not slow"`, the full tier-1 suite still covers it.
+_PREFILL_ARCHS = [pytest.param(a, marks=pytest.mark.slow)
+                  if a == "jamba_1_5_large_398b" else a for a in ARCHS]
+
+
+@pytest.mark.parametrize("arch", _PREFILL_ARCHS)
 def test_prefill_decode_equals_forward(arch):
     cfg = _f32(arch)
     params = init_params(api.param_specs(cfg), jax.random.key(0))

@@ -232,6 +232,42 @@ def test_solver_plan_packet():
     assert PacketPlan.make(impl="pallas") == PacketPlan(impl="pallas")
 
 
+def test_plans_fail_fast_on_bad_knobs():
+    """Regression (PR-4 satellite): a typo'd impl or a zero tile used to
+    surface only at the first kernel call inside the jitted scan (or fall
+    through to the plan's tiles); both now raise at plan construction."""
+    with pytest.raises(ValueError, match="unknown gram impl"):
+        SolverPlan(b=8, impl="palas")                     # the typo'd knob
+    with pytest.raises(ValueError, match="unknown gram impl"):
+        PacketPlan(impl="cuda")
+    with pytest.raises(ValueError, match="unknown gram impl"):
+        PacketPlan.make(impl="REF")
+    with pytest.raises(ValueError, match="positive int"):
+        PacketPlan(bm=0)
+    with pytest.raises(ValueError, match="positive int"):
+        SolverPlan(b=8, tiles=(16, 0))
+    with pytest.raises(ValueError, match=r"\(bm, bk\) pair"):
+        SolverPlan(b=8, tiles=(16,))
+    with pytest.raises(ValueError, match="must be a positive int"):
+        SolverPlan(b=0)
+    with pytest.raises(ValueError, match="must be a positive int"):
+        SolverPlan(b=8, s=0)
+
+
+def test_explicit_zero_tile_rejected_per_call(problem):
+    """bm=0 used to falsy-fall-through to the plan's tiles; now it is an
+    error at the call site, plan or no plan."""
+    from repro.core import gram_packet_sampled
+    X, _ = problem
+    flat = jnp.arange(8, dtype=jnp.int32)
+    u = jnp.ones((X.shape[1],), X.dtype)
+    with pytest.raises(ValueError, match="bm=0"):
+        gram_packet_sampled(X, flat, u, plan=PacketPlan(impl="ref", bm=16),
+                            bm=0)
+    with pytest.raises(ValueError, match="bk=-4"):
+        gram_packet_sampled(X, flat, u, bk=-4)
+
+
 def test_packet_plan_explicit_kwargs_win(problem):
     """A per-call impl/bm/bk overrides the plan's bundled defaults."""
     from repro.core import gram_packet_sampled

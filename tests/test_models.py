@@ -43,7 +43,13 @@ def test_forward_shapes_and_finite(arch):
     assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+# jamba's reduced config is by far the slowest train step on CPU (~55s); the
+# PR gate runs `-m "not slow"`, the full tier-1 suite still covers it.
+_TRAIN_ARCHS = [pytest.param(a, marks=pytest.mark.slow)
+                if a == "jamba_1_5_large_398b" else a for a in ARCH_IDS]
+
+
+@pytest.mark.parametrize("arch", _TRAIN_ARCHS)
 def test_one_train_step(arch):
     cfg = get_reduced(arch)
     params = init_params(api.param_specs(cfg), jax.random.key(0))

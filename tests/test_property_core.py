@@ -3,6 +3,7 @@ with a reason when hypothesis is not installed)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from _hyp import given, settings, st
 
@@ -21,6 +22,10 @@ def _problem(seed, d, n):
     return X, y
 
 
+# The two solver-equivalence properties compile two solvers per example and
+# are by far the slowest cases here when hypothesis is installed; the PR gate
+# runs `-m "not slow"`, the full tier-1 suite (`make test-all`) covers them.
+@pytest.mark.slow
 @given(seed=st.integers(0, 2**16), d=dims, n=dims,
        b=st.integers(1, 5), s=st.integers(1, 6),
        lam=st.floats(1e-6, 10.0))
@@ -35,6 +40,7 @@ def test_ca_bcd_equals_bcd(seed, d, n, b, s, lam):
     np.testing.assert_allclose(r_ca.w, r_cl.w, rtol=1e-9, atol=1e-11)
 
 
+@pytest.mark.slow
 @given(seed=st.integers(0, 2**16), d=dims, n=dims,
        b=st.integers(1, 5), s=st.integers(1, 6),
        lam=st.floats(1e-4, 10.0))

@@ -1,0 +1,205 @@
+"""Registry-level tests for the proximal (elastic-net) formulation -- the
+first formulation added *through* the engine's registry (PR 4 tentpole).
+
+Covers the acceptance criteria:
+  * ``lam1=0`` reproduces the ridge (``bcd``) iterates bit-for-bit through
+    ``get_solver`` (the prox sweep lowers to the ridge sweep, statically);
+  * s=1 matches a hand-rolled classical proximal reference;
+  * s>1 matches the classical schedule, ragged ``iters % s != 0`` included,
+    on both ``ref`` and ``pallas_interpret``;
+  * the soft-threshold produces EXACT zeros and the elastic-net metrics;
+  * the prox-aware sweep equals the ridge sweep at tau=0.
+(The sharded path's equivalence + 1-all-reduce-per-outer-iteration claim is
+asserted in tests/dist_checks.py.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (block_forward_substitution,
+                        block_forward_substitution_prox, get_solver,
+                        overlap_matrix, proximal_bcd, proximal_bcd_reference,
+                        sample_blocks, soft_threshold, s_step_solve,
+                        SolverPlan)
+from repro.core.proximal import ProximalElasticNet
+from repro.data import SyntheticSpec, make_regression
+
+from _x64 import x64_mode  # noqa: F401  (autouse fixture)
+
+LAM = 1e-3
+
+
+@pytest.fixture(scope="module")
+def problem():
+    jax.config.update("jax_enable_x64", True)  # before data gen
+    X, y, _ = make_regression(jax.random.key(0),
+                              SyntheticSpec("t", d=40, n=120, cond=1e4))
+    return X, y
+
+
+def _lam1_for(X, y, frac=0.1):
+    # relative to the lasso critical value max|X y| / n, below which the
+    # solution is not identically zero
+    return frac * float(jnp.max(jnp.abs(X @ y)) / X.shape[1])
+
+
+# --------------------------------------------------------------------------
+# lam1 = 0 IS ridge, bit-for-bit, through the registry
+# --------------------------------------------------------------------------
+
+def test_lam1_zero_is_ridge_bit_for_bit(problem):
+    X, y = problem
+    idx = sample_blocks(jax.random.key(1), X.shape[0], 4, 20)
+    prox = get_solver("proximal", "local")
+    ridge = get_solver("primal", "local")
+    for s in (1, 3):
+        r_p = prox(X, y, LAM, 4, s, 20, None, idx=idx, lam1=0.0)
+        r_r = ridge(X, y, LAM, 4, s, 20, None, idx=idx)
+        assert np.array_equal(np.asarray(r_p.w), np.asarray(r_r.w))
+        assert np.array_equal(np.asarray(r_p.alpha), np.asarray(r_r.alpha))
+
+
+# --------------------------------------------------------------------------
+# s=1 == the hand-rolled classical proximal reference
+# --------------------------------------------------------------------------
+
+def test_engine_s1_is_classical_proximal(problem):
+    X, y = problem
+    lam1 = _lam1_for(X, y)
+    idx = sample_blocks(jax.random.key(2), X.shape[0], 4, 25)
+    res = proximal_bcd(X, y, LAM, 4, 25, None, lam1=lam1, idx=idx)
+    w_ref, al_ref = proximal_bcd_reference(X, y, LAM, lam1, 4, 25, idx)
+    np.testing.assert_allclose(res.w, w_ref, rtol=0, atol=1e-12)
+    np.testing.assert_allclose(res.alpha, al_ref, rtol=0, atol=1e-12)
+
+
+def test_s_step_solve_accepts_formulation_name(problem):
+    """The registry string route: s_step_solve('proximal', ...) resolves the
+    default (lam1=0) instance, and an instance carries its own lam1."""
+    X, y = problem
+    idx = sample_blocks(jax.random.key(3), X.shape[0], 4, 10)
+    r_str = s_step_solve("proximal", SolverPlan(b=4, s=2), X, y, LAM, 10,
+                         None, idx=idx)
+    r_ridge = s_step_solve("primal", SolverPlan(b=4, s=2), X, y, LAM, 10,
+                           None, idx=idx)
+    assert np.array_equal(np.asarray(r_str.w), np.asarray(r_ridge.w))
+    lam1 = _lam1_for(X, y)
+    r_inst = s_step_solve(ProximalElasticNet(lam1=lam1), SolverPlan(b=4, s=2),
+                          X, y, LAM, 10, None, idx=idx)
+    assert not np.array_equal(np.asarray(r_inst.w), np.asarray(r_ridge.w))
+
+
+# --------------------------------------------------------------------------
+# CA identity with the nonsmooth term: s>1 (ragged included) == classical
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("iters,s", [(20, 4), (10, 4), (7, 3), (3, 8)])
+def test_ca_proximal_matches_classical(problem, iters, s):
+    X, y = problem
+    lam1 = _lam1_for(X, y)
+    idx = sample_blocks(jax.random.key(4), X.shape[0], 4, iters)
+    solve = get_solver("proximal", "local")
+    r_cl = solve(X, y, LAM, 4, 1, iters, None, idx=idx, lam1=lam1)
+    r_ca = solve(X, y, LAM, 4, s, iters, None, idx=idx, lam1=lam1)
+    np.testing.assert_allclose(r_ca.w, r_cl.w, rtol=1e-11, atol=1e-13)
+    np.testing.assert_allclose(r_ca.alpha, r_cl.alpha, rtol=1e-11, atol=1e-13)
+    np.testing.assert_allclose(r_ca.history["objective"],
+                               r_cl.history["objective"], rtol=1e-9, atol=0)
+    w_ref, _ = proximal_bcd_reference(X, y, LAM, lam1, 4, iters, idx)
+    np.testing.assert_allclose(r_ca.w, w_ref, rtol=1e-11, atol=1e-13)
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas_interpret"])
+def test_registry_impl_equivalence(problem, impl):
+    """ref-vs-pallas_interpret equivalence through the registry with the
+    threshold active (ragged s so the tail also runs the kernel backend)."""
+    X, y = problem
+    lam1 = _lam1_for(X, y)
+    idx = sample_blocks(jax.random.key(5), X.shape[0], 4, 10)
+    solve = get_solver("proximal", "local")
+    r = solve(X, y, LAM, 4, 4, 10, None, idx=idx, lam1=lam1, impl=impl)
+    r_ref = solve(X, y, LAM, 4, 4, 10, None, idx=idx, lam1=lam1, impl="ref")
+    np.testing.assert_allclose(r.w, r_ref.w, rtol=0, atol=1e-10)
+    np.testing.assert_allclose(r.alpha, r_ref.alpha, rtol=0, atol=1e-10)
+
+
+# --------------------------------------------------------------------------
+# Sparsity + metrics
+# --------------------------------------------------------------------------
+
+def test_soft_threshold_sparsifies(problem):
+    X, y = problem
+    lam1 = _lam1_for(X, y, frac=0.3)
+    res = proximal_bcd(X, y, LAM, 4, 300, jax.random.key(6), lam1=lam1)
+    w = np.asarray(res.w)
+    assert np.sum(w != 0) < X.shape[0]      # exact zeros, not small values
+    assert int(res.history["nnz"][-1]) == np.sum(w != 0)
+    assert res.history["objective"].shape == (300,)
+    assert float(res.history["objective"][-1]) < float(
+        res.history["objective"][0])
+
+
+def test_metrics_and_warm_start(problem):
+    X, y = problem
+    lam1 = _lam1_for(X, y)
+    idx = sample_blocks(jax.random.key(7), X.shape[0], 4, 20)
+    full = proximal_bcd(X, y, LAM, 4, 20, None, lam1=lam1, idx=idx,
+                        w_ref=jnp.ones((X.shape[0],), X.dtype))
+    assert full.history["sol_err"].shape == (20,)
+    half = proximal_bcd(X, y, LAM, 4, 10, None, lam1=lam1, idx=idx[:10])
+    rest = proximal_bcd(X, y, LAM, 4, 10, None, lam1=lam1, idx=idx[10:],
+                        w0=half.w)
+    np.testing.assert_allclose(rest.w, full.w, rtol=1e-11, atol=1e-13)
+
+
+# --------------------------------------------------------------------------
+# The prox sweep itself
+# --------------------------------------------------------------------------
+
+def test_prox_sweep_tau_zero_is_ridge_sweep():
+    s, b = 3, 4
+    sb = s * b
+    k1, k2, k3 = jax.random.split(jax.random.key(8), 3)
+    M = jax.random.normal(k1, (sb, sb), jnp.float64)
+    A = M @ M.T + sb * jnp.eye(sb, dtype=jnp.float64)
+    base = jax.random.normal(k2, (sb,), jnp.float64)
+    w0 = jax.random.normal(k3, (sb,), jnp.float64)
+    flat = jnp.arange(sb, dtype=jnp.int32)      # distinct: overlap = I
+    x_ridge = block_forward_substitution(A, base, s, b)
+    x_prox = block_forward_substitution_prox(
+        A, base, s, b, w0=w0, tau=jnp.zeros((sb,), jnp.float64),
+        overlap=overlap_matrix(flat).astype(A.dtype))
+    np.testing.assert_allclose(x_prox, x_ridge, rtol=1e-12, atol=1e-14)
+
+
+def test_negative_lam1_fails_fast(problem):
+    X, y = problem
+    with pytest.raises(ValueError, match="lam1"):
+        ProximalElasticNet(lam1=-0.1)
+    with pytest.raises(ValueError, match="lam1"):
+        proximal_bcd(X, y, LAM, 4, 4, None, lam1=-1e-3)
+
+
+def test_soft_threshold_operator():
+    u = jnp.asarray([-2.0, -0.5, 0.0, 0.5, 2.0])
+    out = np.asarray(soft_threshold(u, 1.0))
+    np.testing.assert_allclose(out, [-1.0, 0.0, 0.0, 0.0, 1.0])
+    # S(u, 0) == u bit-for-bit (the lam1=0 identity the engine relies on)
+    v = jnp.asarray([-1.75, 3.0, 0.0, 1e-300])
+    assert np.array_equal(np.asarray(soft_threshold(v, 0.0)), np.asarray(v))
+
+
+def test_duplicate_indices_across_blocks(problem):
+    """A coordinate re-drawn in a later inner block must see its updated
+    value (the overlap recurrence); forced duplicates across blocks."""
+    X, y = problem
+    lam1 = _lam1_for(X, y)
+    idx = jnp.asarray([[0, 1, 2, 3], [2, 3, 4, 5], [0, 5, 6, 7]],
+                      jnp.int32)
+    solve = get_solver("proximal", "local")
+    r_cl = solve(X, y, LAM, 4, 1, 3, None, idx=idx, lam1=lam1)
+    r_ca = solve(X, y, LAM, 4, 3, 3, None, idx=idx, lam1=lam1)
+    np.testing.assert_allclose(r_ca.w, r_cl.w, rtol=1e-11, atol=1e-13)
+    w_ref, _ = proximal_bcd_reference(X, y, LAM, lam1, 4, 3, idx)
+    np.testing.assert_allclose(r_ca.w, w_ref, rtol=1e-11, atol=1e-13)

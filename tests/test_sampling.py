@@ -1,0 +1,52 @@
+"""Sampling-mode dispatch: ``shard_balanced`` must actually balance.
+
+Regression for the PR-4 satellite: ``sample_blocks(mode="shard_balanced")``
+used to fall back to ``global_uniform`` silently (the old ``_sample_one``
+comment admitted it), defeating the load-balance guarantee the mode exists
+for (DESIGN.md section 2.6).  Now it dispatches to
+``sample_blocks_balanced`` when the shard count is given and raises
+otherwise.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import sample_blocks, sample_blocks_balanced
+
+
+@pytest.mark.parametrize("n_shards", [2, 4, 8])
+def test_every_shard_contributes_b_over_p(n_shards):
+    n_total, b, iters = 64, 8, 12
+    idx = np.asarray(sample_blocks(jax.random.key(0), n_total, b, iters,
+                                   mode="shard_balanced", n_shards=n_shards))
+    assert idx.shape == (iters, b)
+    shard_len = n_total // n_shards
+    per = b // n_shards
+    for it in range(iters):
+        owners = idx[it] // shard_len
+        counts = np.bincount(owners, minlength=n_shards)
+        assert np.all(counts == per), (it, counts)   # perfectly balanced
+        assert len(set(idx[it].tolist())) == b       # still no replacement
+
+
+def test_shard_balanced_dispatch_matches_balanced_entry_point():
+    key = jax.random.key(1)
+    via_mode = sample_blocks(key, 32, 4, 6, mode="shard_balanced", n_shards=4)
+    direct = sample_blocks_balanced(key, 32, 4, 6, n_shards=4)
+    assert np.array_equal(np.asarray(via_mode), np.asarray(direct))
+
+
+def test_shard_balanced_without_shard_count_raises():
+    with pytest.raises(ValueError, match="sample_blocks_balanced"):
+        sample_blocks(jax.random.key(2), 32, 4, 6, mode="shard_balanced")
+
+
+def test_n_shards_rejected_for_global_uniform():
+    with pytest.raises(ValueError, match="shard_balanced"):
+        sample_blocks(jax.random.key(3), 32, 4, 6, n_shards=4)
+
+
+def test_balanced_divisibility_contract():
+    with pytest.raises(ValueError, match="divisible"):
+        sample_blocks(jax.random.key(4), 32, 6, 3, mode="shard_balanced",
+                      n_shards=4)
