@@ -1,8 +1,16 @@
 """Gram-packet tile autotuning sweep: measure (bm, bk) candidates per
-(sb, n, dtype) operating point and emit the table ``kernels/gram/tuning.py``
-consumes (``tuning.load_table`` / the ``REPRO_GRAM_TUNING`` env var).
+(sb, n, dtype, layout) operating point and emit the table
+``kernels/gram/tuning.py`` consumes (``tuning.load_table`` / the
+``REPRO_GRAM_TUNING`` env var).
 
-On TPU (``--impl pallas``) this times the real kernel and the table entries
+Both operand layouts are swept: the row-sampled packet (the primal's
+operand, timed on the materialized-operand kernel whose tiling it shares)
+and the column-sampled packet of the dual's transpose-free operand (timed on
+``gram_packet_sampled`` over a ``ColMajorOperand``, the lane-slab gather
+kernel).  Tables written by pre-PR-5 sweeps carry three-field keys and load
+unchanged, defaulting to row-major.
+
+On TPU (``--impl pallas``) this times the real kernels and the table entries
 are meaningful; on the CPU container the ref backend ignores tile sizes, so
 the sweep degenerates to recording the heuristic pick per shape bucket --
 the table schema and plumbing are exercised end-to-end either way, and a TPU
@@ -19,48 +27,75 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.gram import gram_packet, tuning
+from repro.kernels.gram import (ColMajorOperand, gram_packet,
+                                gram_packet_sampled, tuning)
 
 from ._util import row, timed
 
-# Solver operating points: sb = s*b, n = points (or points/P for the sharded
-# local packet).
+# Solver operating points, per layout: (sb, contraction).  Rows: sb = s*b
+# against n points (or n/P for the sharded local packet).  Cols: the dual's
+# sb' = s*b' against the d-length feature contraction.
 SHAPES = [(32, 1024), (64, 4096), (128, 4096), (128, 32768)]
+COLS_SHAPES = [(32, 512), (64, 4096)]
 SMOKE_SHAPES = [(16, 512)]
+SMOKE_COLS_SHAPES = [(16, 256)]
 DTYPES = [jnp.float32]
 
 
-def _candidates(m: int, n: int) -> list[tuple[int, int]]:
-    cands = [(bm, bk) for bm in tuning.BM_CANDIDATES if bm <= max(m, 8)
-             for bk in tuning.BK_CANDIDATES if bk <= max(n, 128)]
-    return cands or [(8, 128)]
+def _candidates(m: int, n: int, layout: str) -> list[tuple[int, int]]:
+    bms = (tuning.BM_CANDIDATES if layout == "rows"
+           else tuning.BM_CANDIDATES_COLS)
+    bks = (tuning.BK_CANDIDATES if layout == "rows"
+           else tuning.BK_CANDIDATES_COLS)
+    k_floor = 128 if layout == "rows" else 64
+    cands = [(bm, bk) for bm in bms if bm <= max(m, 8)
+             for bk in bks if bk <= max(n, k_floor)]
+    return cands or [(8, k_floor)]
 
 
-def sweep(shapes, dtypes, impl: str) -> tuple[list[str], dict]:
+def _timed_case(m: int, n: int, dtype, layout: str, impl: str, bm: int,
+                bk: int) -> float:
+    if layout == "rows":
+        A = jax.random.normal(jax.random.key(0), (m, n), dtype)
+        u = jax.random.normal(jax.random.key(1), (n,), dtype)
+        fn = jax.jit(lambda A, u: gram_packet(A, u, scale=1.0 / n, impl=impl,
+                                              bm=bm, bk=bk))
+        return timed(fn, A, u)
+    # cols: contraction runs over d = n; samples come from a column pool.
+    pool = max(4 * m, 256)
+    X = jax.random.normal(jax.random.key(0), (n, pool), dtype)
+    u = jax.random.normal(jax.random.key(1), (n,), dtype)
+    flat = jax.random.randint(jax.random.key(2), (m,), 0, pool, jnp.int32)
+    fn = jax.jit(lambda X, flat, u: gram_packet_sampled(
+        ColMajorOperand(X), flat, u, scale=1.0 / n, impl=impl, bm=bm, bk=bk))
+    return timed(fn, X, flat, u)
+
+
+def sweep(shapes_by_layout: dict, dtypes, impl: str) -> tuple[list[str], dict]:
     """Returns (CSV rows, table mapping bucket-key -> best (bm, bk))."""
     rows, table = [], {}
     tile_sweep = impl in ("pallas",)  # ref ignores tiles; interpret is Python
     for dtype in dtypes:
         dname = jnp.dtype(dtype).name
-        for m, n in shapes:
-            A = jax.random.normal(jax.random.key(0), (m, n), dtype)
-            u = jax.random.normal(jax.random.key(1), (n,), dtype)
-            cands = (_candidates(m, n) if tile_sweep
-                     else [tuning.pick_tiles(m, n, dtype)])
-            best, best_us = None, float("inf")
-            for bm, bk in cands:
-                fn = jax.jit(lambda A, u, bm=bm, bk=bk: gram_packet(
-                    A, u, scale=1.0 / n, impl=impl, bm=bm, bk=bk))
-                us = timed(fn, A, u)
-                if us < best_us:
-                    best, best_us = (bm, bk), us
-            key = (tuning._bucket(tuning._round_up(m, tuning.ROW_GRANULE)),
-                   tuning._bucket(tuning._round_up(n, tuning.LANE_GRANULE)),
-                   dname)
-            table[f"{key[0]},{key[1]},{key[2]}"] = list(best)
-            rows.append(row(f"autotune/gram_{m}x{n}_{dname}", best_us,
-                            f"bm={best[0]} bk={best[1]} impl={impl} "
-                            f"swept={len(cands)}"))
+        for layout, shapes in shapes_by_layout.items():
+            k_granule = (tuning.LANE_GRANULE if layout == "rows"
+                         else tuning.ROW_GRANULE)
+            for m, n in shapes:
+                cands = (_candidates(m, n, layout) if tile_sweep
+                         else [tuning.pick_tiles(m, n, dtype, layout=layout)])
+                best, best_us = None, float("inf")
+                for bm, bk in cands:
+                    us = _timed_case(m, n, dtype, layout, impl, bm, bk)
+                    if us < best_us:
+                        best, best_us = (bm, bk), us
+                key = (tuning._bucket(tuning._round_up(m, tuning.ROW_GRANULE)),
+                       tuning._bucket(tuning._round_up(n, k_granule)),
+                       dname, layout)
+                table[f"{key[0]},{key[1]},{key[2]},{key[3]}"] = list(best)
+                rows.append(row(f"autotune/gram_{layout}_{m}x{n}_{dname}",
+                                best_us,
+                                f"bm={best[0]} bk={best[1]} impl={impl} "
+                                f"layout={layout} swept={len(cands)}"))
     return rows, table
 
 
@@ -82,7 +117,8 @@ def run(impl: str | None = None, smoke: bool = False,
     that file is exactly what ``REPRO_GRAM_TUNING`` consumes.  Pass
     ``out=None`` to sweep without writing."""
     impl = impl or ("pallas" if jax.default_backend() == "tpu" else "ref")
-    shapes = SMOKE_SHAPES if smoke else SHAPES
+    shapes = ({"rows": SMOKE_SHAPES, "cols": SMOKE_COLS_SHAPES} if smoke
+              else {"rows": SHAPES, "cols": COLS_SHAPES})
     rows, table = sweep(shapes, DTYPES, impl)
     if out:
         write_table(table, impl, out)

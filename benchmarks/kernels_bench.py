@@ -9,12 +9,14 @@ what the roofline uses to predict the win on TPU.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
-from repro.core.cost_model import packet_traffic_breakdown
-from repro.kernels.gram import (gram_packet, gram_packet_sampled, panel_apply,
-                                tuning)
+from repro.core.cost_model import dual_operand_tradeoff, packet_traffic_breakdown
+from repro.kernels.gram import (RowMajorOperand, gram_packet,
+                                gram_packet_sampled, panel_apply, tuning)
 
 from ._util import row, timed
 
@@ -94,6 +96,64 @@ PANEL_SHAPE = (512, 1 << 15, 128)
 PANEL_SHAPE_SMOKE = (128, 1 << 11, 32)
 
 
+def _dual_resident_rows(impl: str, d: int, n: int) -> list[str]:
+    """Peak-resident-bytes of the dual solve: the PR-2..4 pre-transposed
+    operand vs the PR-5 column-gather operand, measured from the compiled
+    XLA memory analysis (temps + arguments + outputs) with the cost model's
+    figures alongside.  Off-TPU the wall number is a ref-proxy as usual --
+    the residency comparison is the row's claim."""
+    from repro.core import sample_blocks
+    from repro.core.engine import DualRidge, SolverPlan, s_step_solve
+
+    class _PreTransposeDual(DualRidge):
+        """The PR-2..4 operand strategy (``X.T`` as a row-major operand),
+        kept ONLY as this measurement's baseline.  Mirrors
+        tests/_legacy_dual.py (not importable here: the bench harness runs
+        with only src/ on the path)."""
+
+        def bind(self, X, y, lam, *, x0=None, w_ref=None):
+            bound = super().bind(X, y, lam, x0=x0, w_ref=w_ref)
+            return dataclasses.replace(bound,
+                                       operand=RowMajorOperand(X.T))
+
+    b, s, iters = 8, 4, 8
+    X = jax.random.normal(jax.random.key(7), (d, n), jnp.float32)
+    y = jax.random.normal(jax.random.key(8), (n,), jnp.float32)
+    idx = sample_blocks(jax.random.key(9), n, b, iters)
+    plan = SolverPlan(b=b, s=s, impl=impl)
+
+    def _measure(form):
+        def f(Xv, yv):
+            r = s_step_solve(form, plan, Xv, yv, 1e-3, iters, None, idx=idx)
+            return r.w, r.alpha
+        comp = jax.jit(f).lower(X, y).compile()
+        try:
+            ma = comp.memory_analysis()
+            resident = int(ma.temp_size_in_bytes + ma.argument_size_in_bytes
+                           + ma.output_size_in_bytes)
+        except Exception:       # backends without memory stats
+            resident = -1
+        return timed(lambda: comp(X, y)), resident
+
+    us_pre, res_pre = _measure(_PreTransposeDual())
+    us_col, res_col = _measure(DualRidge())
+    model = dual_operand_tradeoff(d, n, s * b)
+    proxy = "" if impl == "pallas" else " wall=ref-proxy(traffic-model-only)"
+    rows = [
+        row("kernels/dual_resident_pretranspose", us_pre,
+            f"impl={impl} d={d} n={n} resident_bytes={res_pre} "
+            f"modeled_resident={model['pretranspose']['resident_bytes']:.0f}"
+            + proxy),
+        row("kernels/dual_resident_colgather", us_col,
+            f"impl={impl} resident_bytes={res_col} "
+            f"modeled_resident={model['colgather']['resident_bytes']:.0f} "
+            f"resident_ratio="
+            f"{(res_col / res_pre if res_pre > 0 else float('nan')):.3f}"
+            + proxy),
+    ]
+    return rows
+
+
 def run(impl: str | None = None, smoke: bool = False) -> list[str]:
     impl = impl or "ref"
     if smoke:
@@ -104,6 +164,7 @@ def run(impl: str | None = None, smoke: bool = False) -> list[str]:
         d, np_, sbp = PANEL_SHAPE
     rows = _blas3_rows(impl, n, b, s)
     rows += _panel_free_rows(impl, d, np_, sbp)
+    rows += _dual_resident_rows(impl, d, np_)
 
     # pallas interpret-mode correctness/latency reference (not a perf number
     # on CPU -- interpret mode executes the kernel body in Python)

@@ -61,12 +61,13 @@ def _write_smoke_baseline(rows, impl, path=SMOKE_OUT):
 
     import jax.numpy as jnp
 
-    from repro.core.cost_model import packet_traffic_breakdown
+    from repro.core.cost_model import (dual_operand_tradeoff,
+                                       packet_traffic_breakdown)
     from repro.kernels.gram import tuning
 
     from .kernels_bench import PANEL_SHAPE_SMOKE
 
-    _, n, sb = PANEL_SHAPE_SMOKE
+    d, n, sb = PANEL_SHAPE_SMOKE
     bm = tuning.pick_tiles(sb, n, jnp.float32)[0]
     parsed = []
     for line in rows:
@@ -84,6 +85,9 @@ def _write_smoke_baseline(rows, impl, path=SMOKE_OUT):
         "panel_shape": {"sb": sb, "n": n},
         "hbm_bytes_per_iter": packet_traffic_breakdown(sb, n, itemsize=4,
                                                        bm=bm),
+        # The dual-layout trade the column-gather operand makes (modeled;
+        # the kernels/dual_resident_* rows carry the measured XLA figures).
+        "dual_operand_tradeoff": dual_operand_tradeoff(d, n, sb),
         "rows": parsed,
     }
     with open(path, "w") as f:

@@ -23,20 +23,22 @@ import numpy as np  # noqa: E402
 from repro.core import elastic_net_objective, get_solver, sample_blocks  # noqa: E402
 
 
-def main(impl: str | None = None):
+def main(impl: str | None = None, seed: int = 0):
     solve = get_solver("proximal", "local")
     d, n, k = 256, 1024, 16                    # k-sparse ground truth
-    key = jax.random.key(0)
+    # Fixed default seed: the 16/16 support-recovery line below is
+    # reproducible run-to-run in CI logs (seed=0 is the historical stream).
+    key = jax.random.key(seed)
     X = jax.random.normal(key, (d, n), jnp.float64)
     w_true = jnp.zeros((d,)).at[jnp.arange(k) * (d // k)].set(1.0)
-    y = X.T @ w_true + 0.02 * jax.random.normal(jax.random.key(1), (n,))
+    y = X.T @ w_true + 0.02 * jax.random.normal(jax.random.key(seed + 1), (n,))
     lam = 1e-4
     lam1 = 0.1 * float(jnp.max(jnp.abs(X @ y)) / n)
     print(f"problem: X {X.shape}, ||w_true||_0 = {k}, "
           f"lam={lam:.1e}, lam1={lam1:.3e}")
 
     iters, b, s = 600, 8, 20
-    idx = sample_blocks(jax.random.key(2), d, b, iters)
+    idx = sample_blocks(jax.random.key(seed + 2), d, b, iters)
 
     res_cl = solve(X, y, lam, b, 1, iters, None, idx=idx, lam1=lam1, impl=impl)
     res_ca = solve(X, y, lam, b, s, iters, None, idx=idx, lam1=lam1, impl=impl)
@@ -64,4 +66,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--impl", default=None,
                     help="Gram-packet backend: ref | pallas | pallas_interpret")
-    main(ap.parse_args().impl)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed for data/noise/index stream (fixed "
+                         "default => reproducible 16/16 recovery line)")
+    args = ap.parse_args()
+    main(args.impl, seed=args.seed)

@@ -37,11 +37,13 @@ def extract_features(cfg, params, batch):
     return h.reshape(-1, d).T.astype(jnp.float64)   # (d_model, n_tokens)
 
 
-def main():
+def main(seed: int = 0):
     cfg = dataclasses.replace(get_reduced("llama3_2_3b"),
                               dtype=jnp.float32, param_dtype=jnp.float32)
-    params = init_params(api.param_specs(cfg), jax.random.key(0))
-    batch = synthetic_lm_batch(cfg.vocab, seq_len=128, batch=8, seed=3)
+    # Fixed default seed => reproducible probe accuracy line in CI logs
+    # (seed=0 reproduces the historical key(0)/seed=3/key(4) stream).
+    params = init_params(api.param_specs(cfg), jax.random.key(seed))
+    batch = synthetic_lm_batch(cfg.vocab, seq_len=128, batch=8, seed=seed + 3)
 
     X = extract_features(cfg, params, batch)
     # probe target: is the NEXT token in the top half of the vocab?
@@ -54,7 +56,7 @@ def main():
 
     w_opt = ridge_exact(X, y, lam)
     iters, b, s = 200, 32, 10
-    idx = sample_blocks(jax.random.key(4), n, b, iters)
+    idx = sample_blocks(jax.random.key(seed + 4), n, b, iters)
     res_cl = bdcd(X, y, lam, b, iters, None, idx=idx, w_ref=w_opt)
     res_ca = ca_bdcd(X, y, lam, b, s, iters, None, idx=idx, w_ref=w_opt)
 
@@ -69,4 +71,9 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed for params/batch/index stream (fixed "
+                         "default => reproducible output)")
+    main(seed=ap.parse_args().seed)

@@ -136,7 +136,7 @@ class CheckpointManager:
             if zlib.crc32(np.ascontiguousarray(arr).tobytes()) != entry["crc"]:
                 raise IOError(f"crc mismatch in leaf {p}")
             if arr.dtype.kind == "V":  # bfloat16 etc round-trip as raw void
-                import ml_dtypes  # registers extended dtypes with numpy
+                import ml_dtypes  # noqa: F401  (registers numpy dtypes)
                 arr = arr.view(np.dtype(entry["dtype"]))
             arrays.append(arr)
         state = jax.tree.unflatten(treedef, arrays)

@@ -8,7 +8,6 @@ Every config file exports ``CONFIG`` (the exact published geometry) and
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any
 
 import jax.numpy as jnp

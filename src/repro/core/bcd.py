@@ -21,7 +21,9 @@ whose diagonal blocks are the per-iteration Gamma_{sk+j} and whose strictly
 lower blocks carry both correction sums of Eq. (8).
 
 Data flow (panel-free since PR 2): the hot loop never materializes the sampled
-panel ``Y = X[flat, :]``.  The sb x sb packet comes straight from (X, flat)
+panel ``Y = X[flat, :]``.  The formulation binds X as a row-major
+:class:`~repro.kernels.gram.RowMajorOperand` (the PacketOperand layer,
+DESIGN.md section 5.2), so the sb x sb packet comes straight from (X, flat)
 via ``gram_packet_sampled`` -- on TPU the kernel scalar-prefetches the block
 indices and DMA-gathers the sampled rows HBM->VMEM -- and the deferred vector
 updates (Eqs. 5/10, ``alpha += Y^T dws``) are computed from the same (X, flat)

@@ -19,20 +19,22 @@ CA identity: the inner loop is block forward substitution against
 with base_j = (1/n) (Y_j^T w_sk - alpha_sk[idx_j] - y[idx_j]); diagonal blocks
 of A are the Theta_{sk+j} of Eq. (18).
 
-Data flow (panel-free since PR 2): the dual samples *columns* of X, so the
-formulation holds ``XT = X.T`` -- materialized once, outside the hot loop --
-and the sampled Gram ``Y^T Y = XT[flat, :] XT[flat, :]^T`` comes straight from
-(XT, flat) via ``gram_packet_sampled`` without ever forming the (d, sb)
-panel.  The deferred primal updates (Eq. 15/19, ``w -= Y das / (lam n)``) use
-``panel_apply(XT, flat, das)`` == ``X[:, flat] @ das`` from the same pair.
+Data flow (panel-free since PR 2, transpose-free since PR 5): the dual
+samples *columns* of X, and the formulation binds a column-major
+:class:`~repro.kernels.gram.ColMajorOperand` over the ORIGINAL (d, n) array
+-- no ``X.T`` anywhere in the solve path, constructor or scan.  The sampled
+Gram ``Y^T Y`` for ``Y = X[:, flat]`` comes straight from (X, flat) via the
+lane-aligned column-tile kernels (``kernels/gram/sampled_colmajor.py``), and
+the deferred primal updates (Eq. 15/19, ``w -= Y das / (lam n)``) use
+``panel_apply`` on the same operand (``X[:, flat] @ das``).
 
-Memory tradeoff: XT doubles the dataset's resident footprint for the length
-of the solve (X itself stays live for the objective metrics and the caller's
-buffer).  This is deliberate -- a column-sampled kernel would need
-lane-strided DMA gathers, which defeats the row-contiguous copies the
-sampled kernel relies on -- and it trades a one-time O(dn) cost for zero
-per-iteration panel traffic; a column-major sampled variant that avoids the
-second copy is a ROADMAP open item.
+Tradeoff: PRs 2-4 pre-transposed each shard (``Xl.T``) so column sampling
+became row sampling -- row-contiguous DMA, but a second resident copy of the
+dataset for the length of the solve.  The column-gather operand drops that
+copy; its slab fetches over-read by the 128-lane width (worst case, no
+lane-group dedup), which ``cost_model.packet_hbm_bytes(layout="cols")``
+models and ``make bench-smoke`` records next to the halved resident
+footprint.
 """
 from __future__ import annotations
 

@@ -139,15 +139,32 @@ ALGORITHMS: dict[str, Callable[..., Costs]] = {
 # points (sb <= bm=128 => B=1) and fading as sb/bm grows -- which is why the
 # tuning table keeps bm at the sb it can afford in VMEM.
 #
+# Column-major gather (layout="cols", the dual's transpose-free operand): the
+# kernel fetches each sampled column as a lane-aligned (bk x LANE) slab of
+# the ORIGINAL layout and selects the target lane in VMEM, so every panel
+# crossing over-reads by the lane width -- ``lane`` x the useful column bytes
+# (worst case: sampled columns sharing a lane group are not deduplicated).
+# That amplified per-iteration traffic is what the layout trades for
+# dropping the pre-transpose's 2x resident dataset (``dual_operand_tradeoff``
+# puts both sides of the trade next to each other; ``make bench-smoke``
+# records them).
+#
 # Shared smaller terms (both schedules): the residual operand u (n), the
 # alpha/w tile read+write (2n), the sb x sb Gram + sb residual written once,
 # and the sb-vector of updates read back by the apply.
 
 def packet_hbm_bytes(sb: int, n: int, itemsize: int = 4,
-                     panel_free: bool = True, bm: int = 128) -> float:
+                     panel_free: bool = True, bm: int = 128,
+                     layout: str = "rows", lane: int = 128) -> float:
     """Modeled HBM bytes of ONE outer iteration's packet + deferred apply.
-    ``bm`` is the kernel's row-tile size (pass the tuning-table pick)."""
-    panel = sb * n
+    ``n`` is the contraction length (operand columns for ``layout="rows"``;
+    X's rows d for ``layout="cols"``); ``bm`` is the kernel's sample-tile
+    size (pass the tuning-table pick).  ``layout="cols"`` applies the
+    lane-slab amplification ``lane`` to the panel-crossing term."""
+    if layout not in ("rows", "cols"):
+        raise ValueError(f"unknown layout {layout!r}")
+    amp = lane if layout == "cols" else 1
+    panel = sb * n * amp
     blocks = -(-sb // max(bm, 1))
     shared = 3 * n + sb * sb + 2 * sb
     crossings = (blocks + 1) if panel_free else (blocks + 3)
@@ -162,6 +179,48 @@ def packet_traffic_breakdown(sb: int, n: int, itemsize: int = 4,
     fused = packet_hbm_bytes(sb, n, itemsize, panel_free=True, bm=bm)
     return {"baseline_bytes": base, "panel_free_bytes": fused,
             "ratio": fused / base}
+
+
+def dual_operand_tradeoff(d: int, n: int, sb: int, itemsize: int = 4,
+                          bm_rows: int | None = None,
+                          bm_cols: int | None = None,
+                          lane: int = 128) -> dict:
+    """Both sides of the dual-layout trade, per operand strategy:
+
+    * ``pretranspose`` (PRs 2-4): row-gather traffic on ``X.T``, but the
+      transposed copy doubles the resident dataset for the whole solve (plus
+      the one-time 2 d n transpose crossing, not amortized here).
+    * ``colgather`` (PR 5): the original layout stays the only copy; each
+      panel crossing pays the ``lane``-slab amplification instead.
+
+    Each schedule is modeled at ITS OWN kernel's tile pick (the tuning-table
+    (sb, d, layout) entry unless ``bm_rows``/``bm_cols`` pin them) -- using
+    one bm for both would misstate whichever kernel runs different tiles.
+    ``resident_bytes`` counts the dataset copies plus the solve's vectors
+    (w in R^d, alpha and y in R^n); the bench-smoke baseline records the
+    measured XLA figures next to these modeled ones.
+    """
+    if bm_rows is None or bm_cols is None:
+        from repro.kernels.gram import tuning  # keep module import light
+        if bm_rows is None:
+            bm_rows = tuning.pick_tiles(sb, d, np.float32, layout="rows")[0]
+        if bm_cols is None:
+            bm_cols = tuning.pick_tiles(sb, d, np.float32, layout="cols")[0]
+    vectors = (d + 2 * n) * itemsize
+    data = d * n * itemsize
+    return {
+        "pretranspose": {
+            "resident_bytes": float(2 * data + vectors),
+            "hbm_bytes_per_iter": packet_hbm_bytes(
+                sb, d, itemsize, panel_free=True, bm=bm_rows, layout="rows"),
+        },
+        "colgather": {
+            "resident_bytes": float(data + vectors),
+            "hbm_bytes_per_iter": packet_hbm_bytes(
+                sb, d, itemsize, panel_free=True, bm=bm_cols, layout="cols",
+                lane=lane),
+        },
+    }
 
 
 def packet_memory_time(sb: int, n: int, hbm_bytes_per_s: float,

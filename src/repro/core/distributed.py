@@ -30,10 +30,13 @@ combiner; the ROADMAP open item this resolves.)
 All devices compute identical block indices from the replicated key (the
 paper's shared-seed trick), so the overlap terms and the inner block forward
 substitution are local and replicated.  The local (G, r) contributions are
-built panel-free by ``gram_packet_sampled`` on each shard (see the data-flow
-notes in ``repro.core.bcd`` / ``repro.core.bdcd``); mesh construction and
-shard_map go through ``repro.compat`` so the same code runs on JAX 0.4.37
-and newer API generations.
+built panel-free by ``gram_packet_sampled`` on each shard through the
+formulation's PacketOperand -- row-major for the primal's column shards,
+column-major for the dual's row shards, so the dual's ``Xl`` is never
+transposed or copied inside the shard_map body (see the data-flow notes in
+``repro.core.bcd`` / ``repro.core.bdcd``); mesh construction and shard_map
+go through ``repro.compat`` so the same code runs on JAX 0.4.37 and newer
+API generations.
 """
 from __future__ import annotations
 

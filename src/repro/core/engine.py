@@ -12,7 +12,13 @@ module therefore factors the repo's former six hand-rolled solver loops
 into
 
 * a :class:`Formulation` (primal / dual): the handful of problem-specific
-  hooks above, bound to concrete operands by ``bind`` / ``bind_shard``;
+  hooks above, bound to concrete operands by ``bind`` / ``bind_shard`` --
+  the operand is a :class:`~repro.kernels.gram.PacketOperand` (array +
+  layout + gather strategy, DESIGN.md section 5.2), so "which axis is
+  sampled and how" is the operand's business, not the engine's: the primal
+  binds row-major X, the dual binds COLUMN-major X in its original (d, n)
+  layout (no pre-transpose), and a pre-materialized kernel matrix binds
+  through the same dispatch with zero engine edits;
 * a :class:`SolverPlan`: the execution knobs (b, s, backend ``impl``, kernel
   ``tiles``, ``fuse_packet``, ``unroll``, ``track_cond``) -- ``s=1`` *is* the
   classical variant, not a separate loop;
@@ -49,7 +55,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
-from repro.kernels.gram import PacketPlan, gram_packet_sampled, panel_apply
+from repro.kernels.gram import (ColMajorOperand, PacketOperand, PacketPlan,
+                                RowMajorOperand, gram_packet_sampled,
+                                panel_apply)
 from repro.kernels.gram.ops import _check_positive_int, _pad_axis
 
 from .sampling import overlap_matrix, sample_blocks
@@ -102,11 +110,16 @@ class SolverPlan:
 class BoundFormulation(Protocol):
     """A formulation bound to concrete operands (global or one shard's).
 
-    The engine samples rows of ``operand``; the packet it builds is
-    ``G = scale * Y Y^T + reg * I`` and ``r = scale_r * Y u`` for
-    ``Y = operand[flat, :]`` and ``u = packet_vector(carry)``.  ``reg`` is
-    also the coefficient of the duplicate-index overlap term, which is why a
-    single scalar serves both the fused local diagonal and the post-reduce
+    ``operand`` is a :class:`~repro.kernels.gram.PacketOperand` -- the array
+    plus its layout and gather strategy (DESIGN.md section 5.2).  The engine
+    samples the operand's index space; the packet it builds is
+    ``G = scale * Y Y^T + reg * I`` and ``r = scale_r * Y u`` for the
+    operand's sampled panel ``Y(flat)`` (rows of the array for the primal's
+    row-major operand, columns of the ORIGINAL layout for the dual's
+    column-major operand, gathered pre-formed products for a materialized
+    kernel matrix) and ``u = packet_vector(carry)``.  ``reg`` is also the
+    coefficient of the duplicate-index overlap term, which is why a single
+    scalar serves both the fused local diagonal and the post-reduce
     correction.
 
     ``inner_sweep`` owns the subproblem solve: given the replicated
@@ -117,7 +130,7 @@ class BoundFormulation(Protocol):
     the hook exists precisely so a formulation can reshape each block's
     applied step without touching the engine's one hot-loop body.
     """
-    operand: jax.Array
+    operand: PacketOperand
 
     @property
     def scale(self) -> float: ...
@@ -138,8 +151,12 @@ class BoundFormulation(Protocol):
 
 class Formulation(Protocol):
     """A problem formulation: how to bind data to a :class:`BoundFormulation`
-    and how its operands shard (DESIGN.md section 5.2)."""
+    and how its operands shard (DESIGN.md section 5.3).  ``operand_layout``
+    names the PacketOperand kind ``bind``/``bind_shard`` produce (DESIGN.md
+    section 5.2) -- introspection only (dry-runs, benchmarks); the engine
+    itself dispatches through the operand object."""
     name: str
+    operand_layout: str
 
     def sample_dim(self, d: int, n: int) -> int: ...
     def bind(self, X, y, lam, *, x0=None, w_ref=None) -> BoundFormulation: ...
@@ -172,7 +189,8 @@ def _sol_err(w, w_ref):
 
 @dataclasses.dataclass(frozen=True)
 class _BoundPrimal:
-    """Algorithm 1/2 hooks; ``operand`` is X (d, n) or a column shard of it.
+    """Algorithm 1/2 hooks; ``operand`` is the row-major X (d, n) or a column
+    shard of it.
 
     Packet: Gamma = Y Y^T / n + lam I with Y = X[flat, :] and the residual
     contribution Y (y - alpha) / n of the Eq. (7)/(8) rhs; base subtracts the
@@ -180,7 +198,7 @@ class _BoundPrimal:
     9-10).  All expressions are layout-neutral: on a column shard (y and
     alpha local, w replicated) they compute exactly the local contribution.
     """
-    operand: jax.Array
+    operand: PacketOperand
     y: jax.Array            # aligned with operand's columns
     lam: float
     n: int                  # GLOBAL data-point count (scales use it)
@@ -201,7 +219,7 @@ class _BoundPrimal:
         return self.lam
 
     def init_carry(self, axes=None):
-        X = self.operand
+        X = self.operand.array
         w = jnp.zeros((self.d,), X.dtype) if self.w0 is None else self.w0
         if axes is not None:
             # alpha is device-varying (each shard owns a slice of R^n); w is
@@ -236,20 +254,22 @@ class _BoundPrimal:
 class PrimalRidge:
     """(CA-)BCD: samples features (rows of X); 1D-block-column layout."""
     name = "primal"
+    operand_layout = "rows"
 
     def sample_dim(self, d, n):
         return d
 
     def bind(self, X, y, lam, *, x0=None, w_ref=None):
         d, n = X.shape
-        return _BoundPrimal(operand=X, y=y, lam=lam, n=n, d=d, w0=x0,
-                            w_ref=w_ref)
+        return _BoundPrimal(operand=RowMajorOperand(X), y=y, lam=lam, n=n,
+                            d=d, w0=x0, w_ref=w_ref)
 
     def pad_shards(self, X, y, n_shards):
         return _pad_to(X, n_shards, 1), _pad_to(y, n_shards, 0)
 
     def bind_shard(self, Xl, yl, lam, *, d, n):
-        return _BoundPrimal(operand=Xl, y=yl, lam=lam, n=n, d=d)
+        return _BoundPrimal(operand=RowMajorOperand(Xl), y=yl, lam=lam, n=n,
+                            d=d)
 
     def dist_in_specs(self, axis):
         return P(None, axis), P(axis), P(None)
@@ -267,10 +287,13 @@ class PrimalRidge:
 
 @dataclasses.dataclass(frozen=True)
 class _BoundDual:
-    """Algorithm 3/4 hooks; ``operand`` is X^T (n, d) or a pre-transposed row
-    shard Xl^T (n, dl) -- the dual samples *columns* of X, and pre-transposing
-    once outside the hot loop turns them into contiguous rows for the sampled
-    kernel (memory tradeoff discussed in ``repro.core.bdcd``).
+    """Algorithm 3/4 hooks; ``operand`` is the column-major X (d, n) -- or a
+    row shard Xl (dl, n) -- in its ORIGINAL layout.  The dual samples
+    *columns* of X; the column-gather operand (``sampled_colmajor.py``) makes
+    that a first-class access pattern, so no pre-transpose and no second
+    resident copy of the dataset exist anywhere in the dual solve path
+    (the PR-2..4 ``Xl.T`` workaround this replaces is discussed in
+    ``repro.core.bdcd``).
 
     Packet: Theta = Y^T Y / (lam n^2) + I/n with Y = X[:, flat] plus the RAW
     projection Y^T w (scale_r=1); base assembles Eq. (17)/(18); the inner
@@ -278,7 +301,7 @@ class _BoundDual:
     row shard (w local, alpha and y replicated) the same expressions compute
     the local contribution.
     """
-    operand: jax.Array
+    operand: PacketOperand
     y: jax.Array            # (n,), replicated in the distributed layout
     lam: float
     n: int                  # GLOBAL data-point count
@@ -302,8 +325,9 @@ class _BoundDual:
         dtype = self.operand.dtype
         if axes is not None:
             # w is device-varying (each shard owns a slice of R^d); alpha is
-            # replicated.
-            wl = compat.pvary(jnp.zeros((self.operand.shape[1],), dtype), axes)
+            # replicated.  The operand's contraction length IS the local dl.
+            wl = compat.pvary(jnp.zeros((self.operand.contraction,), dtype),
+                              axes)
             return wl, jnp.zeros((self.n,), dtype)
         alpha = jnp.zeros((self.n,), dtype) if self.alpha0 is None else self.alpha0
         w = -self.X @ alpha / (self.lam * self.n)
@@ -322,7 +346,8 @@ class _BoundDual:
     def update(self, carry, idx, dx, pp):
         w, alpha = carry
         alpha = alpha.at[idx].add(dx)                      # Eq. (20)
-        # Eq. (15)/(19): w -= X[:, idx] @ dx / (lam n) == operand[idx]^T dx / (lam n).
+        # Eq. (15)/(19): w -= X[:, idx] @ dx / (lam n) -- the column-major
+        # operand's Y^T v, straight from the original layout.
         w = w - panel_apply(self.operand, idx, dx, plan=pp) / (self.lam * self.n)
         return w, alpha
 
@@ -340,23 +365,26 @@ class _BoundDual:
 
 
 class DualRidge:
-    """(CA-)BDCD: samples data points (columns of X); 1D-block-row layout."""
+    """(CA-)BDCD: samples data points (columns of X) from the ORIGINAL
+    (d, n) layout via the column-major operand; 1D-block-row layout."""
     name = "dual"
+    operand_layout = "cols"
 
     def sample_dim(self, d, n):
         return n
 
     def bind(self, X, y, lam, *, x0=None, w_ref=None):
-        return _BoundDual(operand=X.T, y=y, lam=lam, n=X.shape[1], X=X,
-                          alpha0=x0, w_ref=w_ref)
+        return _BoundDual(operand=ColMajorOperand(X), y=y, lam=lam,
+                          n=X.shape[1], X=X, alpha0=x0, w_ref=w_ref)
 
     def pad_shards(self, X, y, n_shards):
         return _pad_to(X, n_shards, 0), y
 
     def bind_shard(self, Xl, yl, lam, *, d, n):
-        # Transposed once per shard, outside the scan: sampled columns become
-        # contiguous rows for the index-prefetched kernel.
-        return _BoundDual(operand=Xl.T, y=yl, lam=lam, n=n)
+        # The ORIGINAL (dl, n) shard, zero copies: the column-major operand
+        # gathers sampled columns in place (pre-PR-5 this was ``Xl.T``,
+        # doubling the resident dataset for the length of the solve).
+        return _BoundDual(operand=ColMajorOperand(Xl), y=yl, lam=lam, n=n)
 
     def dist_in_specs(self, axis):
         return P(axis, None), P(None), P(None)

@@ -41,7 +41,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .engine import (SolveResult, SolverPlan, _BoundPrimal,
+from .engine import (RowMajorOperand, SolveResult, SolverPlan, _BoundPrimal,
                      _objective_from_alpha, _pad_to, _sol_err,
                      register_formulation, register_solver, s_step_solve,
                      s_step_solve_sharded)
@@ -101,6 +101,7 @@ class ProximalElasticNet:
     """
     lam1: float = 0.0
     name: ClassVar[str] = "proximal"
+    operand_layout: ClassVar[str] = "rows"
 
     def __post_init__(self):
         # Same fail-fast contract as the kernel knobs: a negative lam1 turns
@@ -114,15 +115,15 @@ class ProximalElasticNet:
 
     def bind(self, X, y, lam, *, x0=None, w_ref=None):
         d, n = X.shape
-        return _BoundProximal(operand=X, y=y, lam=lam, n=n, d=d, w0=x0,
-                              w_ref=w_ref, lam1=self.lam1)
+        return _BoundProximal(operand=RowMajorOperand(X), y=y, lam=lam, n=n,
+                              d=d, w0=x0, w_ref=w_ref, lam1=self.lam1)
 
     def pad_shards(self, X, y, n_shards):
         return _pad_to(X, n_shards, 1), _pad_to(y, n_shards, 0)
 
     def bind_shard(self, Xl, yl, lam, *, d, n):
-        return _BoundProximal(operand=Xl, y=yl, lam=lam, n=n, d=d,
-                              lam1=self.lam1)
+        return _BoundProximal(operand=RowMajorOperand(Xl), y=yl, lam=lam,
+                              n=n, d=d, lam1=self.lam1)
 
     def dist_in_specs(self, axis):
         return P(None, axis), P(axis), P(None)

@@ -1,12 +1,18 @@
+from .operands import (ColMajorOperand, MaterializedOperand, PacketOperand,
+                       RowMajorOperand, as_operand)
 from .ops import (PacketPlan, gram, gram_packet, gram_packet_sampled,
                   normal_matvec, panel_apply, panel_matvec)
-from .ref import (gram_packet_ref, gram_packet_sampled_ref, gram_ref,
+from .ref import (gram_packet_ref, gram_packet_sampled_cols_ref,
+                  gram_packet_sampled_ref, gram_ref, panel_apply_cols_ref,
                   panel_apply_ref, panel_matvec_ref)
 from . import tuning
 
 __all__ = [
-    "PacketPlan", "gram", "gram_packet", "gram_packet_sampled", "panel_apply",
+    "PacketPlan", "PacketOperand", "RowMajorOperand", "ColMajorOperand",
+    "MaterializedOperand", "as_operand",
+    "gram", "gram_packet", "gram_packet_sampled", "panel_apply",
     "panel_matvec", "normal_matvec", "gram_ref", "gram_packet_ref",
-    "gram_packet_sampled_ref", "panel_apply_ref", "panel_matvec_ref",
+    "gram_packet_sampled_ref", "gram_packet_sampled_cols_ref",
+    "panel_apply_ref", "panel_apply_cols_ref", "panel_matvec_ref",
     "tuning",
 ]

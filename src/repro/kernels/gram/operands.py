@@ -1,0 +1,296 @@
+"""The PacketOperand layer: what the packet kernels gather, made first-class.
+
+Formulations used to encode "how the packet's operand is sampled" by shaping
+the array itself -- the dual pre-transposed each shard (``Xl.T``) so column
+sampling became row sampling, doubling the resident dataset for the length of
+the solve.  This module lifts the choice into an object owning the operand
+array, its LAYOUT, and its GATHER STRATEGY:
+
+* :class:`RowMajorOperand` -- array (S, C), samples are rows; the
+  index-prefetched row-DMA kernels of ``sampled_kernel.py``.
+* :class:`ColMajorOperand` -- array (C, S), samples are columns of the
+  ORIGINAL layout; the lane-aligned column-tile kernels of
+  ``sampled_colmajor.py``.  This is what lets ``_BoundDual`` bind X (d, n)
+  with zero pre-transpose and zero extra resident copy.
+* :class:`MaterializedOperand` -- array (S, S) of ALREADY-FORMED products
+  (a kernel matrix K): the "Gram" is a gather, not a contraction.  This is
+  the kernel-BDCD prerequisite (arXiv:2406.18001); smoke-proven through the
+  same dispatch.
+
+Uniform semantics in terms of the implicit sampled panel ``Y(flat)``,
+shape (m, C):
+
+    packet(flat, u):  G = scale * Y Y^T + reg*I,   r = scale_r * Y u
+    apply(flat, v):   out(C) = scale * Y^T v
+    matvec(flat, t):  out(m) = scale * Y t
+
+(for ``MaterializedOperand`` the panel is the implicit factor with
+``Y Y^T = K[flat][:, flat]`` and ``Y u = K[flat, :] u`` -- the kernel trick.)
+
+Registration IS the protocol: a new operand kind implements these three
+methods (plus ``dtype``/``layout``) and every consumer -- the engine's one
+hot-loop body, ``ops.py``'s public entry points, the benchmarks -- dispatches
+through it with zero edits.  ``as_operand`` keeps raw arrays working
+everywhere (they mean row-major, the pre-PR-5 contract).
+
+Knob resolution (``impl``/``bm``/``bk``) stays in ``ops.py``; the methods
+here receive resolved knobs and own only padding + kernel selection.  Tile
+defaults come from ``tuning.pick_tiles`` keyed on (shape, dtype, layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from . import ref, tuning
+from .sampled_colmajor import (LANE, gram_packet_sampled_cols_pallas,
+                               panel_apply_cols_pallas)
+from .sampled_kernel import (gram_packet_sampled_pallas, panel_apply_pallas,
+                             panel_matvec_pallas)
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _pad_axis(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def resolve_tiles(m: int, n: int, dtype, bm: int | None, bk: int | None,
+                  layout: str = "rows") -> tuple[int, int]:
+    """THE tile-clamp rule, shared by every consumer (ops.py's materialized
+    entry points and both gather operands): explicit values win, else the
+    tuning table's (m, n-contraction, dtype, layout) pick; both are clamped
+    to the padded operand so they are directly usable as pallas block shapes.
+    The contraction granule is the 128-lane width for row-major operands and
+    the 8-row sublane for column-major ones (the contraction runs over X's
+    rows there)."""
+    k_granule = (tuning.LANE_GRANULE if layout == "rows"
+                 else tuning.ROW_GRANULE)
+    auto_bm, auto_bk = tuning.pick_tiles(m, n, dtype, layout=layout)
+    bm_eff = min(bm, _round_up(m, tuning.ROW_GRANULE)) if bm else auto_bm
+    bk_eff = min(bk, _round_up(n, k_granule)) if bk else auto_bk
+    return bm_eff, bk_eff
+
+
+@runtime_checkable
+class PacketOperand(Protocol):
+    """A packet operand: the array, its layout, and its gather strategy."""
+    array: jax.Array
+    layout: ClassVar[str]
+
+    @property
+    def dtype(self): ...
+    @property
+    def samples(self) -> int: ...
+    @property
+    def contraction(self) -> int: ...
+    def packet(self, flat, u, *, scale, reg, scale_r, impl, bm, bk,
+               symmetric_skip): ...
+    def apply(self, flat, v, *, scale, impl, bm, bk): ...
+    def matvec(self, flat, t, *, scale, impl, bm, bk): ...
+
+
+@dataclasses.dataclass(frozen=True)
+class RowMajorOperand:
+    """Array (S, C); samples rows: Y = array[flat, :].  The PR-2 row-DMA
+    gather kernels -- bm row copies of bk contiguous elements each."""
+    array: jax.Array
+    layout: ClassVar[str] = "rows"
+
+    @property
+    def dtype(self):
+        return self.array.dtype
+
+    @property
+    def samples(self) -> int:
+        return self.array.shape[0]
+
+    @property
+    def contraction(self) -> int:
+        return self.array.shape[1]
+
+    def _tiles(self, m, bm, bk):
+        return resolve_tiles(m, self.contraction, self.dtype, bm, bk, "rows")
+
+    def packet(self, flat, u, *, scale, reg, scale_r, impl, bm, bk,
+               symmetric_skip):
+        if impl == "ref":
+            return ref.gram_packet_sampled_ref(self.array, flat, u, scale,
+                                               reg, scale_r)
+        m = flat.shape[0]
+        bm_eff, bk_eff = self._tiles(m, bm, bk)
+        # The operand's column pad is loop-invariant in the solvers' scans
+        # (the array never changes across iterations), so XLA hoists it.
+        Xp = _pad_axis(self.array, bk_eff, 1)
+        up = _pad_axis(u, bk_eff, 0)
+        flat_p = _pad_axis(flat.astype(jnp.int32), bm_eff, 0)
+        G, r = gram_packet_sampled_pallas(
+            Xp, flat_p, up, scale=scale, reg=reg, scale_r=scale_r, bm=bm_eff,
+            bk=bk_eff, symmetric_skip=symmetric_skip,
+            interpret=(impl == "pallas_interpret"))
+        return G[:m, :m], r[:m]
+
+    def apply(self, flat, v, *, scale, impl, bm, bk):
+        if impl == "ref":
+            return ref.panel_apply_ref(self.array, flat, v, scale)
+        m = flat.shape[0]
+        n = self.contraction
+        bm_eff, bk_eff = self._tiles(m, bm, bk)
+        Xp = _pad_axis(self.array, bk_eff, 1)
+        flat_p = _pad_axis(flat.astype(jnp.int32), bm_eff, 0)
+        vp = _pad_axis(v, bm_eff, 0)
+        out = panel_apply_pallas(Xp, flat_p, vp, scale=scale, bm=bm_eff,
+                                 bk=bk_eff,
+                                 interpret=(impl == "pallas_interpret"))
+        return out[:n]
+
+    def matvec(self, flat, t, *, scale, impl, bm, bk):
+        if impl == "ref":
+            return ref.panel_matvec_ref(self.array, flat, t, scale)
+        m = flat.shape[0]
+        bm_eff, bk_eff = self._tiles(m, bm, bk)
+        Xp = _pad_axis(self.array, bk_eff, 1)
+        tp = _pad_axis(t, bk_eff, 0)
+        flat_p = _pad_axis(flat.astype(jnp.int32), bm_eff, 0)
+        out = panel_matvec_pallas(Xp, flat_p, tp, scale=scale, bm=bm_eff,
+                                  bk=bk_eff,
+                                  interpret=(impl == "pallas_interpret"))
+        return out[:m]
+
+
+@dataclasses.dataclass(frozen=True)
+class ColMajorOperand:
+    """Array (C, S); samples COLUMNS of the original layout:
+    Y = array[:, flat].T.  The lane-aligned column-tile gather kernels --
+    this is the dual's operand with no pre-transpose and no second copy."""
+    array: jax.Array
+    layout: ClassVar[str] = "cols"
+
+    @property
+    def dtype(self):
+        return self.array.dtype
+
+    @property
+    def samples(self) -> int:
+        return self.array.shape[1]
+
+    @property
+    def contraction(self) -> int:
+        return self.array.shape[0]
+
+    def _tiles(self, m, bm, bk):
+        return resolve_tiles(m, self.contraction, self.dtype, bm, bk, "cols")
+
+    def _padded(self, bk_eff):
+        # Pad d (contraction rows; zeros contribute nothing) to the bk tile
+        # and n to the LANE width so every slab copy is in bounds.  Padded
+        # index slots clamp to column 0 and only touch G/r rows >= m.
+        return _pad_axis(_pad_axis(self.array, bk_eff, 0), LANE, 1)
+
+    def packet(self, flat, u, *, scale, reg, scale_r, impl, bm, bk,
+               symmetric_skip):
+        if impl == "ref":
+            return ref.gram_packet_sampled_cols_ref(self.array, flat, u,
+                                                    scale, reg, scale_r)
+        m = flat.shape[0]
+        bm_eff, bk_eff = self._tiles(m, bm, bk)
+        Xp = self._padded(bk_eff)
+        up = _pad_axis(u, bk_eff, 0)
+        flat_p = _pad_axis(flat.astype(jnp.int32), bm_eff, 0)
+        G, r = gram_packet_sampled_cols_pallas(
+            Xp, flat_p, up, scale=scale, reg=reg, scale_r=scale_r, bm=bm_eff,
+            bk=bk_eff, symmetric_skip=symmetric_skip,
+            interpret=(impl == "pallas_interpret"))
+        return G[:m, :m], r[:m]
+
+    def apply(self, flat, v, *, scale, impl, bm, bk):
+        if impl == "ref":
+            return ref.panel_apply_cols_ref(self.array, flat, v, scale)
+        m = flat.shape[0]
+        d = self.contraction
+        bm_eff, bk_eff = self._tiles(m, bm, bk)
+        Xp = self._padded(bk_eff)
+        flat_p = _pad_axis(flat.astype(jnp.int32), bm_eff, 0)
+        vp = _pad_axis(v, bm_eff, 0)
+        out = panel_apply_cols_pallas(Xp, flat_p, vp, scale=scale, bm=bm_eff,
+                                      bk=bk_eff,
+                                      interpret=(impl == "pallas_interpret"))
+        return out[:d]
+
+    def matvec(self, flat, t, *, scale, impl, bm, bk):
+        # out(m) = scale * array[:, flat]^T t.  No solver needs the kernel
+        # route (the dual's residual rides the packet), so this is the
+        # jnp path on every impl -- XLA fuses the gather into the matvec.
+        acc = jnp.float32 if self.dtype != jnp.float64 else jnp.float64
+        out = scale * jnp.einsum("km,k->m", self.array[:, flat], t,
+                                 preferred_element_type=acc)
+        return out.astype(acc)
+
+
+@dataclasses.dataclass(frozen=True)
+class MaterializedOperand:
+    """Array K (S, S) of pre-materialized products (a kernel matrix): the
+    packet's Gram is GATHERED, not contracted -- G = scale * K[flat][:, flat]
+    + reg*I, r = scale_r * K[flat, :] u.  There is no panel to fuse away, so
+    every impl runs the same jnp gather (validated like any other impl
+    string; the kernel-BDCD formulation of arXiv:2406.18001 binds through
+    here with zero engine edits)."""
+    array: jax.Array
+    layout: ClassVar[str] = "materialized"
+
+    @property
+    def dtype(self):
+        return self.array.dtype
+
+    @property
+    def samples(self) -> int:
+        return self.array.shape[0]
+
+    @property
+    def contraction(self) -> int:
+        return self.array.shape[1]
+
+    def _acc(self):
+        return jnp.float32 if self.dtype != jnp.float64 else jnp.float64
+
+    def packet(self, flat, u, *, scale, reg, scale_r, impl, bm, bk,
+               symmetric_skip):
+        acc = self._acc()
+        K = self.array
+        rows = K[flat, :].astype(acc)
+        G = scale * rows[:, flat] + reg * jnp.eye(flat.shape[0], dtype=acc)
+        sr = scale if scale_r is None else scale_r
+        r = sr * (rows @ u.astype(acc))
+        return G, r
+
+    def apply(self, flat, v, *, scale, impl, bm, bk):
+        acc = self._acc()
+        out = scale * jnp.einsum("mk,m->k", self.array[flat, :], v,
+                                 preferred_element_type=acc)
+        return out.astype(acc)
+
+    def matvec(self, flat, t, *, scale, impl, bm, bk):
+        acc = self._acc()
+        out = scale * jnp.einsum("mk,k->m", self.array[flat, :], t,
+                                 preferred_element_type=acc)
+        return out.astype(acc)
+
+
+def as_operand(x) -> PacketOperand:
+    """Normalize: PacketOperands pass through; raw arrays mean row-major
+    (the pre-PR-5 contract every existing caller relies on)."""
+    if isinstance(x, (RowMajorOperand, ColMajorOperand, MaterializedOperand)):
+        return x
+    if isinstance(x, PacketOperand):      # duck-typed third-party operand
+        return x
+    return RowMajorOperand(x)

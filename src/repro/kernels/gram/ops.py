@@ -12,28 +12,30 @@ Entry points:
 
 * ``gram_packet(A, u)`` -- fused (G, r) on a pre-materialized operand (kept
   for callers that already hold the panel, e.g. TSQR's stacked R factors).
-* ``gram_packet_sampled(X, flat, u)`` -- the panel-free hot path: same packet
-  for ``Y = X[flat, :]`` without materializing Y.  The Pallas backend
-  scalar-prefetches ``flat`` and DMA-gathers rows of X from HBM inside the
-  kernel (``sampled_kernel.py``); the ref backend gathers with jnp.  All four
-  solvers and both sharded variants build their packets here.
+* ``gram_packet_sampled(X, flat, u)`` -- the panel-free hot path: the same
+  packet for the sampled panel ``Y`` without materializing Y.  ``X`` is a
+  :mod:`~repro.kernels.gram.operands` PacketOperand (row-major /
+  column-major / pre-materialized -- the operand owns the gather strategy)
+  or a raw array, which means row-major: ``Y = X[flat, :]``.  All solver
+  formulations build their packets here through the operand their
+  ``bind``/``bind_shard`` produced.
 * ``panel_apply(X, flat, v)`` / ``panel_matvec(X, flat, t)`` -- the deferred
-  vector updates (``alpha += Y^T dws``, ``wl -= Yl das``) and the row-side
-  matvec, also panel-free.
+  vector updates (``alpha += Y^T dws``, ``w -= Y das``) and the sample-side
+  matvec, also panel-free and also operand-dispatched.
 * ``gram(A)`` -- Gram only, dispatched to a residual-free kernel (the packet
   kernel is never fed a zeros u).
 * ``normal_matvec(X, v)`` -- the CG normal-equations operator
   ``scale * X X^T v + lam v`` as two streaming panel products.
 
 Tile sizes: callers may pin ``bm``/``bk``; otherwise ``tuning.pick_tiles``
-consults the autotuned (sb, n, dtype) table populated by
-``benchmarks/gram_autotune.py`` and falls back to the 128/512 heuristic.
+consults the autotuned (sb, n, dtype, layout) table populated by
+``benchmarks/gram_autotune.py`` and falls back to the layout's heuristic.
 
 Knob threading: callers that issue several packet calls with the same
 backend/tile choices (the solver engine) carry ONE :class:`PacketPlan` and
 pass it as ``plan=`` instead of re-threading ``impl``/``bm``/``bk`` through
 every signature.  Explicitly-passed knobs win over the plan's, so a plan acts
-as a bundle of defaults (DESIGN.md section 5.3).
+as a bundle of defaults (DESIGN.md section 5.4).
 """
 from __future__ import annotations
 
@@ -43,10 +45,9 @@ import operator
 import jax
 import jax.numpy as jnp
 
-from . import ref, tuning
+from . import ref
 from .gram_kernel import gram_packet_pallas, gram_pallas
-from .sampled_kernel import (gram_packet_sampled_pallas, panel_apply_pallas,
-                             panel_matvec_pallas)
+from .operands import _pad_axis, as_operand, resolve_tiles
 
 _IMPLS = ("ref", "pallas", "pallas_interpret")
 
@@ -117,15 +118,6 @@ def _with_plan(plan: PacketPlan | None, impl, bm, bk):
             bk if bk is not None else plan.bk)
 
 
-def _pad_axis(x: jax.Array, mult: int, axis: int) -> jax.Array:
-    pad = (-x.shape[axis]) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
-
-
 def _auto_impl() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
@@ -138,14 +130,18 @@ def _check_impl(impl: str) -> None:
             f"unknown gram impl {impl!r}; expected one of {_IMPLS}")
 
 
+def _resolve(plan, impl, bm, bk) -> tuple[str, int | None, int | None]:
+    impl, bm, bk = _with_plan(plan, impl, bm, bk)
+    impl = impl or _auto_impl()
+    _check_impl(impl)
+    return impl, bm, bk
+
+
 def _tiles(m: int, n: int, dtype, bm: int | None, bk: int | None
            ) -> tuple[int, int]:
-    """Resolve (bm, bk): explicit values win, else the autotuning table; both
-    are clamped so tiles never exceed the padded operand."""
-    auto_bm, auto_bk = tuning.pick_tiles(m, n, dtype)
-    bm_eff = min(bm, _round_up(m, tuning.ROW_GRANULE)) if bm else auto_bm
-    bk_eff = min(bk, _round_up(n, tuning.LANE_GRANULE)) if bk else auto_bk
-    return bm_eff, bk_eff
+    """(bm, bk) for a materialized row-major operand: the operand layer's
+    shared clamp rule at layout="rows"."""
+    return resolve_tiles(m, n, dtype, bm, bk, "rows")
 
 
 def gram_packet(A: jax.Array, u: jax.Array, *, scale: float = 1.0,
@@ -164,9 +160,7 @@ def gram_packet(A: jax.Array, u: jax.Array, *, scale: float = 1.0,
     Zero padding is exact: padded k-columns contribute 0 to both products and
     padded m-rows are sliced off (their diagonal reg never leaves the pad).
     """
-    impl, bm, bk = _with_plan(plan, impl, bm, bk)
-    impl = impl or _auto_impl()
-    _check_impl(impl)
+    impl, bm, bk = _resolve(plan, impl, bm, bk)
     if impl == "ref":
         return ref.gram_packet_ref(A, u, scale, reg, scale_r)
     m, n = A.shape
@@ -180,86 +174,52 @@ def gram_packet(A: jax.Array, u: jax.Array, *, scale: float = 1.0,
     return G[:m, :m], r[:m]
 
 
-def gram_packet_sampled(X: jax.Array, flat: jax.Array, u: jax.Array, *,
+def gram_packet_sampled(X, flat: jax.Array, u: jax.Array, *,
                         scale: float = 1.0, reg: float = 0.0,
                         scale_r: float | None = None, impl: str | None = None,
                         bm: int | None = None, bk: int | None = None,
                         symmetric_skip: bool = True,
                         plan: PacketPlan | None = None
                         ) -> tuple[jax.Array, jax.Array]:
-    """Panel-free packet: (G, r) = (scale*Y Y^T + reg*I, scale_r*Y u) for
-    Y = X[flat, :] *without materializing Y*.  X (d, n), flat (m,) int
-    indices into X's rows (duplicates allowed), u (n,).
+    """Panel-free packet: (G, r) = (scale*Y Y^T + reg*I, scale_r*Y u) for the
+    operand's sampled panel Y *without materializing Y*.  ``X`` is a
+    PacketOperand or a raw (d, n) array (row-major: ``Y = X[flat, :]``);
+    ``flat`` (m,) int indices (duplicates allowed), ``u`` of the operand's
+    contraction length.
 
-    The Pallas backend scalar-prefetches ``flat`` and streams the sampled
-    rows HBM->VMEM inside the kernel, so the sb x n panel never crosses HBM
-    as a separate array.  Padding is exact: padded k-columns of X are zero,
-    and padded index slots (clamped to row 0) only touch G/r rows >= m, which
-    are sliced off before the regularized diagonal can leak.
+    The operand owns the gather: row-major scalar-prefetches ``flat`` and
+    streams sampled rows HBM->VMEM inside the kernel; column-major gathers
+    lane-aligned column tiles of the original layout; materialized operands
+    gather the already-formed products.  Padding is exact in every layout
+    (padded contraction entries are zero and padded index slots only touch
+    G/r rows >= m, which are sliced off before the regularized diagonal can
+    leak).
     """
-    impl, bm, bk = _with_plan(plan, impl, bm, bk)
-    impl = impl or _auto_impl()
-    _check_impl(impl)
-    if impl == "ref":
-        return ref.gram_packet_sampled_ref(X, flat, u, scale, reg, scale_r)
-    m = flat.shape[0]
-    n = X.shape[1]
-    bm_eff, bk_eff = _tiles(m, n, X.dtype, bm, bk)
-    # X's column pad is loop-invariant in the solvers' scans (X never changes
-    # across iterations), so XLA hoists it out of the hot loop.
-    Xp = _pad_axis(X, bk_eff, 1)
-    up = _pad_axis(u, bk_eff, 0)
-    flat_p = _pad_axis(flat.astype(jnp.int32), bm_eff, 0)
-    G, r = gram_packet_sampled_pallas(
-        Xp, flat_p, up, scale=scale, reg=reg, scale_r=scale_r, bm=bm_eff,
-        bk=bk_eff, symmetric_skip=symmetric_skip,
-        interpret=(impl == "pallas_interpret"))
-    return G[:m, :m], r[:m]
+    impl, bm, bk = _resolve(plan, impl, bm, bk)
+    return as_operand(X).packet(flat, u, scale=scale, reg=reg,
+                                scale_r=scale_r, impl=impl, bm=bm, bk=bk,
+                                symmetric_skip=symmetric_skip)
 
 
-def panel_apply(X: jax.Array, flat: jax.Array, v: jax.Array, *,
+def panel_apply(X, flat: jax.Array, v: jax.Array, *,
                 scale: float = 1.0, impl: str | None = None,
                 bm: int | None = None, bk: int | None = None,
                 plan: PacketPlan | None = None) -> jax.Array:
-    """out(n) = scale * X[flat, :]^T v, panel-free: the deferred vector
-    updates (``alpha += Y^T dws``; with X pre-transposed, ``wl -= Yl das``).
-    Padded index slots carry v == 0, so their gathered rows contribute 0."""
-    impl, bm, bk = _with_plan(plan, impl, bm, bk)
-    impl = impl or _auto_impl()
-    _check_impl(impl)
-    if impl == "ref":
-        return ref.panel_apply_ref(X, flat, v, scale)
-    m = flat.shape[0]
-    n = X.shape[1]
-    bm_eff, bk_eff = _tiles(m, n, X.dtype, bm, bk)
-    Xp = _pad_axis(X, bk_eff, 1)
-    flat_p = _pad_axis(flat.astype(jnp.int32), bm_eff, 0)
-    vp = _pad_axis(v, bm_eff, 0)
-    out = panel_apply_pallas(Xp, flat_p, vp, scale=scale, bm=bm_eff,
-                             bk=bk_eff, interpret=(impl == "pallas_interpret"))
-    return out[:n]
+    """out = scale * Y^T v for the operand's sampled panel, panel-free: the
+    deferred vector updates (``alpha += Y^T dws`` primal, ``w -= Y das``
+    dual).  Output length is the operand's contraction dimension.  Padded
+    index slots carry v == 0, so their gathered panel rows contribute 0."""
+    impl, bm, bk = _resolve(plan, impl, bm, bk)
+    return as_operand(X).apply(flat, v, scale=scale, impl=impl, bm=bm, bk=bk)
 
 
-def panel_matvec(X: jax.Array, flat: jax.Array, t: jax.Array, *,
+def panel_matvec(X, flat: jax.Array, t: jax.Array, *,
                  scale: float = 1.0, impl: str | None = None,
                  bm: int | None = None, bk: int | None = None,
                  plan: PacketPlan | None = None) -> jax.Array:
-    """out(m) = scale * X[flat, :] t, panel-free (the residual direction)."""
-    impl, bm, bk = _with_plan(plan, impl, bm, bk)
-    impl = impl or _auto_impl()
-    _check_impl(impl)
-    if impl == "ref":
-        return ref.panel_matvec_ref(X, flat, t, scale)
-    m = flat.shape[0]
-    n = X.shape[1]
-    bm_eff, bk_eff = _tiles(m, n, X.dtype, bm, bk)
-    Xp = _pad_axis(X, bk_eff, 1)
-    tp = _pad_axis(t, bk_eff, 0)
-    flat_p = _pad_axis(flat.astype(jnp.int32), bm_eff, 0)
-    out = panel_matvec_pallas(Xp, flat_p, tp, scale=scale, bm=bm_eff,
-                              bk=bk_eff,
-                              interpret=(impl == "pallas_interpret"))
-    return out[:m]
+    """out(m) = scale * Y t, panel-free (the residual direction)."""
+    impl, bm, bk = _resolve(plan, impl, bm, bk)
+    return as_operand(X).matvec(flat, t, scale=scale, impl=impl, bm=bm, bk=bk)
 
 
 def normal_matvec(X: jax.Array, v: jax.Array, *, lam: float = 0.0,
@@ -294,9 +254,7 @@ def gram(A: jax.Array, *, scale: float = 1.0, reg: float = 0.0,
          plan: PacketPlan | None = None) -> jax.Array:
     """G = scale * A @ A^T + reg * I, via the residual-free Gram kernel (the
     packet kernel's u path is never fed, computed, or written)."""
-    impl, bm, bk = _with_plan(plan, impl, bm, bk)
-    impl = impl or _auto_impl()
-    _check_impl(impl)
+    impl, bm, bk = _resolve(plan, impl, bm, bk)
     if impl == "ref":
         return ref.gram_ref(A, scale, reg)
     m, n = A.shape
@@ -306,7 +264,3 @@ def gram(A: jax.Array, *, scale: float = 1.0, reg: float = 0.0,
                     symmetric_skip=symmetric_skip,
                     interpret=(impl == "pallas_interpret"))
     return G[:m, :m]
-
-
-def _round_up(x: int, mult: int) -> int:
-    return -(-x // mult) * mult

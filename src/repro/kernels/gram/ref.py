@@ -42,6 +42,26 @@ def gram_packet_sampled_ref(X: jax.Array, flat: jax.Array, u: jax.Array,
     return gram_packet_ref(X[flat, :], u, scale, reg, scale_r)
 
 
+def gram_packet_sampled_cols_ref(X: jax.Array, flat: jax.Array, u: jax.Array,
+                                 scale: float = 1.0, reg: float = 0.0,
+                                 scale_r: float | None = None
+                                 ) -> tuple[jax.Array, jax.Array]:
+    """Column-sampled packet oracle: ``gram_packet_ref(X[:, flat].T, u)`` --
+    the dual layout's (G, r) = (scale * Y^T Y + reg*I, scale_r * Y^T u) for
+    Y = X[:, flat], straight from the original (d, n) array."""
+    return gram_packet_ref(X[:, flat].T, u, scale, reg, scale_r)
+
+
+def panel_apply_cols_ref(X: jax.Array, flat: jax.Array, v: jax.Array,
+                         scale: float = 1.0) -> jax.Array:
+    """out(d) = scale * X[:, flat] @ v -- the dual's deferred update from the
+    original layout (``w -= Y das / (lam n)`` with Y = X[:, flat])."""
+    acc = jnp.float32 if X.dtype != jnp.float64 else jnp.float64
+    out = scale * jnp.einsum("km,m->k", X[:, flat], v,
+                             preferred_element_type=acc)
+    return out.astype(acc)
+
+
 def panel_apply_ref(X: jax.Array, flat: jax.Array, v: jax.Array,
                     scale: float = 1.0) -> jax.Array:
     """out(n) = scale * X[flat, :]^T v -- the deferred vector updates

@@ -1,0 +1,254 @@
+"""Column-tile sampled Pallas kernels: the dual layout without the pre-transpose.
+
+The dual methods (Algorithms 3/4) sample *columns* of X.  Until PR 5 the
+solvers faked that by materializing ``XT = X.T`` once per solve, turning
+column sampling into the row-sampled kernels of ``sampled_kernel.py`` at the
+cost of a second resident copy of the dataset for the whole solve.  The
+kernels here gather column tiles of the ORIGINAL (d, n) layout instead:
+
+* ``gram_packet_sampled_cols_pallas``: the fused dual packet
+  ``(G = scale * Y^T Y + reg*I, r = scale_r * Y^T u)`` for ``Y = X[:, flat]``
+  -- same output contract as the row-sampled packet on ``X.T``, zero extra
+  resident copy.
+* ``panel_apply_cols_pallas``: the deferred dual update
+  ``out(d) = scale * X[:, flat] @ v`` (Eq. 15/19's ``w -= Y das / (lam n)``).
+
+Gather strategy (lane-aligned column DMA): a raw column copy would move bk
+words with stride n -- 4-byte bursts the TPU DMA engines serialize.  Instead
+each sampled column ``c = flat[a]`` is fetched as the lane-aligned slab
+``X[k*bk:(k+1)*bk, (c//LANE)*LANE : +LANE]`` -- contiguous 128-lane rows, the
+same burst shape as the row kernel's copies -- and the target column
+``c % LANE`` is selected out of the slab in VMEM (one-hot mask + lane-sum,
+no arithmetic on the values, so the extracted panel is bitwise the gathered
+column).  The slab fetch over-reads by the lane width: LANE x the useful
+column bytes, the per-iteration traffic this layout trades for dropping the
+2x resident footprint (``cost_model.packet_hbm_bytes(layout="cols")`` carries
+the term; sampled columns sharing a lane group are NOT deduplicated -- the
+model is the worst case).
+
+Grid/tiling mirrors ``sampled_kernel.py`` with the contraction running over
+X's ROWS (d): grid = (m/bm, m/bm, d/bk) with k innermost, symmetric skip +
+mirror, reg fused on the last k step.  The extracted panels are (bm, bk) --
+sampled column a as row a, restricted to the k-th row tile of X -- so the
+MXU contractions are the row kernel's, verbatim.  Default tiles are smaller
+than the row kernel's (the slab scratch is LANE x a panel): at
+(bm=8, bk=256, f32) VMEM holds 2 * (8*256*128)*4B of slabs + 2 * (8*256)*4B
+of panels ~= 2.1 MiB.
+
+Requires m % bm == 0, d % bk == 0, n % LANE == 0 (the operand layer pads;
+padded index slots point at column 0 and only touch G/r rows >= m, padded
+d rows of X are zero so they contribute nothing to the contraction).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .gram_kernel import _add_diag_reg, mirror_lower
+
+LANE = 128            # lane width of the aligned slab copies
+DEFAULT_BM_COLS = 8   # G tile edge (sampled columns per block)
+DEFAULT_BK_COLS = 256 # contraction tile over d (X's rows)
+
+
+def _gather_cols(idx_ref, x_ref, panel, slabs, sems, base, k,
+                 bm: int, bk: int):
+    """Fetch columns ``X[k*bk:(k+1)*bk, idx_ref[base+a]] -> panel[a]`` for
+    a < bm via lane-aligned slab DMAs: start all bm slab copies on per-slot
+    semaphores, then drain each and select its target lane into the panel."""
+
+    def _copy(a):
+        group = (idx_ref[base + a] // LANE) * LANE
+        return pltpu.make_async_copy(
+            x_ref.at[pl.ds(k * bk, bk), pl.ds(group, LANE)],
+            slabs.at[a], sems.at[a])
+
+    def _start(a, _):
+        _copy(a).start()
+        return 0
+
+    def _extract(a, _):
+        _copy(a).wait()
+        col = idx_ref[base + a] % LANE
+        slab = slabs[pl.ds(a, 1)][0]                     # (bk, LANE)
+        lanes = jax.lax.broadcasted_iota(jnp.int32, (bk, LANE), 1)
+        # One-hot select: x + 0 is exact, so panel row a IS column `col`.
+        sel = jnp.sum(jnp.where(lanes == col, slab, jnp.zeros_like(slab)),
+                      axis=1)
+        panel[pl.ds(a, 1), :] = sel[None, :]
+        return 0
+
+    jax.lax.fori_loop(0, bm, _start, 0)
+    jax.lax.fori_loop(0, bm, _extract, 0)
+
+
+def _sampled_cols_packet_kernel(idx_ref, x_ref, u_ref, g_ref, r_ref, yi, yj,
+                                slab_i, slab_j, sem_i, sem_j, *, scale: float,
+                                reg: float, scale_r: float, n_k: int, bm: int,
+                                bk: int, symmetric_skip: bool):
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    acc = g_ref.dtype
+
+    @pl.when(k == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    @pl.when(jnp.logical_and(k == 0, j == 0))
+    def _init_r():
+        r_ref[...] = jnp.zeros_like(r_ref)
+
+    compute = jnp.logical_or(j <= i, jnp.logical_not(symmetric_skip))
+
+    @pl.when(compute)
+    def _gather_i():
+        _gather_cols(idx_ref, x_ref, yi, slab_i, sem_i, i * bm, k, bm, bk)
+
+    @pl.when(jnp.logical_and(compute, i != j))
+    def _gather_j():
+        _gather_cols(idx_ref, x_ref, yj, slab_j, sem_j, j * bm, k, bm, bk)
+
+    @pl.when(compute)
+    def _accumulate():
+        a_i = yi[...]
+        a_j = jnp.where(i == j, yi[...], yj[...])
+        g_ref[...] += scale * jax.lax.dot_general(
+            a_i, a_j, (((1,), (1,)), ((), ())),
+            preferred_element_type=acc)
+
+    # r = scale_r * Y^T u rides on the j == 0 cells (u tiled over d).
+    @pl.when(j == 0)
+    def _residual():
+        u = u_ref[...]
+        r_ref[...] += scale_r * jax.lax.dot_general(
+            yi[...], u[:, None], (((1,), (0,)), ((), ())),
+            preferred_element_type=acc)[:, 0]
+
+    @pl.when(jnp.logical_and(k == n_k - 1, i == j))
+    def _reg():
+        _add_diag_reg(g_ref, reg)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "reg", "scale_r", "bm",
+                                             "bk", "symmetric_skip",
+                                             "interpret"))
+def gram_packet_sampled_cols_pallas(X: jax.Array, flat: jax.Array,
+                                    u: jax.Array, *, scale: float = 1.0,
+                                    reg: float = 0.0,
+                                    scale_r: float | None = None,
+                                    bm: int = DEFAULT_BM_COLS,
+                                    bk: int = DEFAULT_BK_COLS,
+                                    symmetric_skip: bool = True,
+                                    interpret: bool = False
+                                    ) -> tuple[jax.Array, jax.Array]:
+    """(G, r) = (scale * Y^T Y + reg*I, scale_r * Y^T u) for Y = X[:, flat],
+    gathered from the original (d, n) layout.  X (d, n) with d % bk == 0 and
+    n % LANE == 0, flat (m,) int32 with m % bm == 0, u (d,)."""
+    d, n = X.shape
+    m = flat.shape[0]
+    if m % bm or d % bk or n % LANE:
+        raise ValueError(
+            f"flat ({m},) / X {X.shape} not tiled by bm={bm}, bk={bk}, "
+            f"LANE={LANE}")
+    n_k = d // bk
+    grid = (m // bm, m // bm, n_k)
+    acc = jnp.float64 if X.dtype == jnp.float64 else jnp.float32
+
+    kernel = functools.partial(
+        _sampled_cols_packet_kernel, scale=scale, reg=reg,
+        scale_r=(scale if scale_r is None else scale_r), n_k=n_k, bm=bm,
+        bk=bk, symmetric_skip=symmetric_skip)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                       # flat -> SMEM, pre-grid
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),  # X in HBM
+            pl.BlockSpec((bk,), lambda i, j, k, idx: (k,)),       # u tile (d)
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bm), lambda i, j, k, idx: (i, j)),  # G tile
+            pl.BlockSpec((bm,), lambda i, j, k, idx: (i,)),       # r tile
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, bk), X.dtype),           # extracted row panel i
+            pltpu.VMEM((bm, bk), X.dtype),           # extracted row panel j
+            pltpu.VMEM((bm, bk, LANE), X.dtype),     # slabs for panel i
+            pltpu.VMEM((bm, bk, LANE), X.dtype),     # slabs for panel j
+            pltpu.SemaphoreType.DMA((bm,)),
+            pltpu.SemaphoreType.DMA((bm,)),
+        ],
+    )
+    g, r = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((m, m), acc),
+            jax.ShapeDtypeStruct((m,), acc),
+        ],
+        interpret=interpret,
+    )(flat, X, u)
+
+    if symmetric_skip:
+        g = mirror_lower(g, bm)
+    return g, r
+
+
+def _panel_apply_cols_kernel(idx_ref, x_ref, v_ref, o_ref, ybuf, slabs, sems,
+                             *, scale: float, bm: int, bk: int):
+    k, t = pl.program_id(0), pl.program_id(1)
+    acc = o_ref.dtype
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    _gather_cols(idx_ref, x_ref, ybuf, slabs, sems, t * bm, k, bm, bk)
+    o_ref[...] += scale * jax.lax.dot_general(
+        ybuf[...], v_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=acc)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bm", "bk", "interpret"))
+def panel_apply_cols_pallas(X: jax.Array, flat: jax.Array, v: jax.Array, *,
+                            scale: float = 1.0, bm: int = DEFAULT_BM_COLS,
+                            bk: int = DEFAULT_BK_COLS,
+                            interpret: bool = False) -> jax.Array:
+    """out(d) = scale * X[:, flat] @ v from the original layout -- the dual's
+    deferred ``w -= Y das / (lam n)`` without a pre-transposed operand.  Grid
+    (d/bk, m/bm) with the sampled-column tiles innermost so each output tile
+    accumulates in VMEM; padded index slots must carry v == 0 (the operand
+    layer guarantees this)."""
+    d, n = X.shape
+    m = flat.shape[0]
+    if m % bm or d % bk or n % LANE:
+        raise ValueError(
+            f"flat ({m},) / X {X.shape} not tiled by bm={bm}, bk={bk}, "
+            f"LANE={LANE}")
+    acc = jnp.float64 if X.dtype == jnp.float64 else jnp.float32
+
+    kernel = functools.partial(_panel_apply_cols_kernel, scale=scale, bm=bm,
+                               bk=bk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(d // bk, m // bm),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),  # X in HBM
+            pl.BlockSpec((bm,), lambda k, t, idx: (t,)),          # v tile
+        ],
+        out_specs=pl.BlockSpec((bk,), lambda k, t, idx: (k,)),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bk), X.dtype),
+            pltpu.VMEM((bm, bk, LANE), X.dtype),
+            pltpu.SemaphoreType.DMA((bm,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((d,), acc),
+        interpret=interpret,
+    )(flat, X, v)

@@ -1,25 +1,31 @@
-"""Tile-size selection for the Gram kernels: (bm, bk) per (sb, n, dtype).
+"""Tile-size selection for the Gram kernels: (bm, bk) per (sb, n, dtype,
+layout).
 
 The static 128/512 defaults (PR 1) leave MXU utilization on the table at the
 solver's actual operating points -- small sb (s*b in the tens) against a wide
 contraction, or narrow local shards in the distributed layouts.  This module
-replaces them with a lookup table keyed on bucketed ``(sb, n, dtype)``:
+replaces them with a lookup table keyed on bucketed ``(sb, n, dtype,
+layout)``:
 
-* ``pick_tiles(m, n, dtype)`` -- the single entry point ``ops.py`` consults
-  whenever a caller does not pin ``bm``/``bk`` explicitly.  Exact-bucket hits
-  come from ``_TABLE``; misses fall back to the PR-1 heuristic (cap at 128/512,
-  round up to the 8-row sublane / 128-lane granules), so behaviour without a
-  table entry is unchanged.
-* ``benchmarks/gram_autotune.py`` sweeps the candidate grid on the running
-  backend and emits a JSON table; ``load_table(path)`` /
+* ``pick_tiles(m, n, dtype, layout="rows")`` -- the single entry point the
+  operand layer consults whenever a caller does not pin ``bm``/``bk``
+  explicitly.  ``n`` is the CONTRACTION length (the operand's columns for the
+  row-sampled layout; X's rows d for the column-sampled layout).  Exact-bucket
+  hits come from ``_TABLE``; misses fall back to the per-layout heuristic
+  (rows: cap at 128/512; cols: cap at the smaller 8/256 tiles the slab
+  scratch affords), so behaviour without a table entry is unchanged.
+* ``benchmarks/gram_autotune.py`` sweeps the candidate grid for BOTH layouts
+  on the running backend and emits a JSON table; ``load_table(path)`` /
   ``register_table(mapping)`` merge it into the live table (also honoured at
-  import time via the ``REPRO_GRAM_TUNING`` env var so TPU runs can ship their
-  sweep results without code changes).
+  import time via the ``REPRO_GRAM_TUNING`` env var so TPU runs can ship
+  their sweep results without code changes).  Old three-field keys
+  (``"m,n,dtype"``) load unchanged and mean row-major.
 
 Buckets are powers of two: a shape belongs to the smallest power-of-two
 bucket >= its padded size.  That keeps the table small while distinguishing
-the regimes that matter (VMEM pressure scales with bm*bk; MXU efficiency with
-how close bm is to 128).
+the regimes that matter (VMEM pressure scales with bm*bk -- LANE-amplified
+for the column gather's slabs -- and MXU efficiency with how close bm is
+to 128).
 """
 from __future__ import annotations
 
@@ -29,29 +35,41 @@ import os
 import jax.numpy as jnp
 
 from .gram_kernel import DEFAULT_BK, DEFAULT_BM
+from .sampled_colmajor import DEFAULT_BK_COLS, DEFAULT_BM_COLS
 
 # Hardware granules: 8-row sublanes, 128-element lanes (f32; the kernel pads
 # bf16 the same way and lets Mosaic repack).
 ROW_GRANULE = 8
 LANE_GRANULE = 128
 
-# Candidate grid swept by benchmarks/gram_autotune.py.
+LAYOUTS = ("rows", "cols")
+
+# Candidate grids swept by benchmarks/gram_autotune.py.  The column-gather
+# kernel's slab scratch is LANE x the panel, so its candidates stay small.
 BM_CANDIDATES = (8, 16, 32, 64, 128)
 BK_CANDIDATES = (128, 256, 512, 1024)
+BM_CANDIDATES_COLS = (8, 16, 32)
+BK_CANDIDATES_COLS = (64, 128, 256, 512)
+
+_DEFAULTS = {"rows": (DEFAULT_BM, DEFAULT_BK),
+             "cols": (DEFAULT_BM_COLS, DEFAULT_BK_COLS)}
 
 # Seed table from the CPU-container sweep (make bench-smoke runs the ref
 # backend, so these entries encode shape-bucketing only, not TPU timings; a
 # real-TPU sweep overwrites them via REPRO_GRAM_TUNING).  Keys are
-# (m_bucket, n_bucket, dtype_name).
-_TABLE: dict[tuple[int, int, str], tuple[int, int]] = {
+# (m_bucket, n_bucket, dtype_name, layout).
+_TABLE: dict[tuple[int, int, str, str], tuple[int, int]] = {
     # solver operating points: sb = s*b in the tens, n in the thousands
-    (32, 1024, "float32"): (32, 512),
-    (32, 4096, "float32"): (32, 1024),
-    (64, 4096, "float32"): (64, 512),
-    (128, 4096, "float32"): (128, 512),
-    (128, 32768, "float32"): (128, 1024),
-    (256, 32768, "float32"): (128, 1024),
-    (128, 32768, "bfloat16"): (128, 1024),
+    (32, 1024, "float32", "rows"): (32, 512),
+    (32, 4096, "float32", "rows"): (32, 1024),
+    (64, 4096, "float32", "rows"): (64, 512),
+    (128, 4096, "float32", "rows"): (128, 512),
+    (128, 32768, "float32", "rows"): (128, 1024),
+    (256, 32768, "float32", "rows"): (128, 1024),
+    (128, 32768, "bfloat16", "rows"): (128, 1024),
+    # dual operating points: sb' in the tens against a d-length contraction
+    (32, 512, "float32", "cols"): (8, 256),
+    (64, 4096, "float32", "cols"): (16, 512),
 }
 
 
@@ -70,26 +88,45 @@ def _dtype_name(dtype) -> str:
     return jnp.dtype(dtype).name
 
 
-def pick_tiles(m: int, n: int, dtype) -> tuple[int, int]:
-    """(bm, bk) for an (m, n) Gram operand: table hit, else PR-1 heuristic.
+def _check_layout(layout: str) -> None:
+    if layout not in LAYOUTS:
+        raise ValueError(
+            f"unknown operand layout {layout!r}; expected one of {LAYOUTS}")
+
+
+def pick_tiles(m: int, n: int, dtype, layout: str = "rows"
+               ) -> tuple[int, int]:
+    """(bm, bk) for an (m, n-contraction) Gram operand in ``layout``: table
+    hit, else the layout's heuristic default.
 
     The returned tiles never exceed the padded operand, so callers can use
-    them directly as pallas block shapes after ops.py's pad-to-tile.
+    them directly as pallas block shapes after the operand layer's
+    pad-to-tile.  For ``layout="cols"`` the contraction axis pads on the
+    8-row sublane granule (it runs over X's rows), not the 128 lane granule.
     """
+    _check_layout(layout)
+    k_granule = LANE_GRANULE if layout == "rows" else ROW_GRANULE
     m_pad = _round_up(max(m, 1), ROW_GRANULE)
-    n_pad = _round_up(max(n, 1), LANE_GRANULE)
-    key = (_bucket(m_pad), _bucket(n_pad), _dtype_name(dtype))
-    bm, bk = _TABLE.get(key, (DEFAULT_BM, DEFAULT_BK))
+    n_pad = _round_up(max(n, 1), k_granule)
+    key = (_bucket(m_pad), _bucket(n_pad), _dtype_name(dtype), layout)
+    bm, bk = _TABLE.get(key, _DEFAULTS[layout])
     return min(bm, m_pad), min(bk, n_pad)
 
 
 def register_table(mapping: dict) -> None:
     """Merge entries into the live table.  Keys may be tuples or the JSON
-    string form ``"m_bucket,n_bucket,dtype"``; values are (bm, bk)."""
+    string forms ``"m_bucket,n_bucket,dtype"`` (legacy, meaning row-major)
+    and ``"m_bucket,n_bucket,dtype,layout"``; values are (bm, bk)."""
     for k, v in mapping.items():
         if isinstance(k, str):
-            mb, nb, dt = k.split(",")
-            k = (int(mb), int(nb), dt)
+            parts = k.split(",")
+            if len(parts) == 3:            # pre-PR-5 table: row-major
+                parts.append("rows")
+            mb, nb, dt, layout = parts
+            k = (int(mb), int(nb), dt, layout)
+        elif len(k) == 3:
+            k = (*k, "rows")
+        _check_layout(k[3])
         _TABLE[tuple(k)] = (int(v[0]), int(v[1]))
 
 
@@ -104,7 +141,7 @@ def load_table(path: str) -> int:
 
 def table_snapshot() -> dict[str, tuple[int, int]]:
     """JSON-serializable copy of the live table (for gram_autotune output)."""
-    return {f"{k[0]},{k[1]},{k[2]}": v for k, v in sorted(_TABLE.items())}
+    return {f"{k[0]},{k[1]},{k[2]},{k[3]}": v for k, v in sorted(_TABLE.items())}
 
 
 _env_table = os.environ.get("REPRO_GRAM_TUNING")

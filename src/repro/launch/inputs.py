@@ -9,13 +9,13 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import api
 from repro.models.module import ParamSpec
 from repro.models.sharding import make_rules
-from repro.train.trainer import abstract_train_state, train_step_shardings
+from repro.train.trainer import abstract_train_state
 
 
 def _sds(shape, dtype, mesh, spec):

@@ -25,14 +25,17 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed for params + prompts (fixed default "
+                         "=> reproducible outputs)")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
-    params = init_params(api.param_specs(cfg), jax.random.key(0))
+    params = init_params(api.param_specs(cfg), jax.random.key(args.seed))
     eng = Engine(cfg, params, ServeConfig(
         max_seq=512, slots=args.slots, temperature=args.temperature))
 
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(args.seed)
     chunk = cfg.ssm.chunk if cfg.ssm else 8
     prompts = [list(rng.integers(1, cfg.vocab, size=chunk))
                for _ in range(args.requests)]

@@ -22,9 +22,7 @@ import argparse
 import json
 import time
 
-import jax
-
-from repro.core import count_in_compiled
+from repro.core import FORMULATIONS, count_in_compiled
 from repro.core.distributed import lower_solver
 from repro.launch.mesh import make_production_mesh
 
@@ -56,6 +54,10 @@ def run(out_dir: str = "artifacts/solver", impl: str | None = None,
             rec = {
                 "mesh": mesh_kind, "chips": mesh.size, "s": s, "fused": fused,
                 "formulation": formulation,
+                # PacketOperand layout the formulation binds (the dual's
+                # "cols" cells lower with NO pre-transpose in the shard body)
+                "operand_layout": getattr(FORMULATIONS[formulation],
+                                          "operand_layout", "rows"),
                 "iters": iters, "collectives": cs.count,
                 "operand_bytes": cs.operand_bytes, "link_bytes": cs.link_bytes,
                 "flops_per_device": ca.get("flops", 0.0),

@@ -38,7 +38,6 @@ def build_model_cfg(arch: str, preset: dict):
     kw = {}
     if "d_model" in preset:
         d = preset["d_model"]
-        hd = cfg.resolved_head_dim
         kw.update(d_model=d, d_ff=4 * d)
         if cfg.n_heads:
             kw.update(n_heads=max(d // 64, 1) , head_dim=64,
@@ -62,6 +61,9 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--mesh", default="none",
                     help="'none' (single device), 'auto' (all local devices)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed for init + data stream (fixed default "
+                         "=> reproducible loss trajectory)")
     args = ap.parse_args()
 
     preset = dict(PRESETS[args.preset])
@@ -70,7 +72,8 @@ def main() -> None:
     model_cfg = build_model_cfg(args.arch, preset)
     run_cfg = TrainRunConfig(
         steps=preset["steps"], global_batch=preset["global_batch"],
-        seq_len=preset["seq_len"], lr=preset["lr"], ckpt_dir=args.ckpt_dir)
+        seq_len=preset["seq_len"], lr=preset["lr"], ckpt_dir=args.ckpt_dir,
+        seed=args.seed)
     mesh = None
     if args.mesh == "auto" and len(jax.devices()) > 1:
         mesh = plan_mesh(len(jax.devices()))

@@ -19,9 +19,7 @@ Public entry points (used by the trainer, server, dry-run and tests):
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

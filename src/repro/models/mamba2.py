@@ -12,8 +12,6 @@ the ssm/hybrid archs are the ones that run the long_500k cell.
 """
 from __future__ import annotations
 
-import math
-
 import jax
 import jax.numpy as jnp
 

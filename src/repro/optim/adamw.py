@@ -18,7 +18,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.models.module import ParamSpec, is_spec, tree_map_specs
+from repro.models.module import ParamSpec, tree_map_specs
 
 
 @dataclasses.dataclass(frozen=True)

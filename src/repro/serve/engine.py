@@ -16,14 +16,12 @@ cells lower at the production mesh.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import api, init_params
-from repro.models.module import ParamSpec
 
 
 @dataclasses.dataclass

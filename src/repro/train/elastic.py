@@ -18,7 +18,6 @@ from __future__ import annotations
 import jax
 
 from repro import compat
-from repro.models.sharding import make_rules
 from .trainer import train_step_shardings
 
 

@@ -7,6 +7,8 @@ reason, so the rest of the module (and the tier-1 suite) still runs.
 """
 import pytest
 
+__all__ = ["HAVE_HYPOTHESIS", "HealthCheck", "given", "settings", "st"]
+
 try:
     from hypothesis import HealthCheck, given, settings
     from hypothesis import strategies as st

@@ -1,0 +1,23 @@
+"""The PR-2..4 dual operand strategy -- ``X.T`` bound as a row-major
+operand -- reconstructed OUTSIDE the engine as the invariance baseline the
+layout tests compare against.  The shipped ``DualRidge`` binds the original
+(d, n) layout; this subclass is the only place the pre-transpose still
+exists on the test side (benchmarks/kernels_bench.py carries its own
+measurement-only copy because the bench harness runs without tests/ on the
+path)."""
+import dataclasses
+
+from repro.core.engine import DualRidge
+from repro.kernels.gram import RowMajorOperand
+
+
+class LegacyPreTransposeDual(DualRidge):
+    """Measurement/baseline only: binds ``RowMajorOperand(X.T)``."""
+
+    def bind(self, X, y, lam, *, x0=None, w_ref=None):
+        bound = super().bind(X, y, lam, x0=x0, w_ref=w_ref)
+        return dataclasses.replace(bound, operand=RowMajorOperand(X.T))
+
+    def bind_shard(self, Xl, yl, lam, *, d, n):
+        bound = super().bind_shard(Xl, yl, lam, d=d, n=n)
+        return dataclasses.replace(bound, operand=RowMajorOperand(Xl.T))

@@ -33,6 +33,19 @@ def check_solver_equivalence():
     np.testing.assert_allclose(w_d2, r2.w, rtol=1e-11, atol=1e-13)
     np.testing.assert_allclose(al_d2, r2.alpha, rtol=1e-11, atol=1e-13)
 
+    # PR 5: the transpose-free column-gather dual operand is
+    # iterate-identical to the PR-2..4 pre-transposed operand on the
+    # 8-shard row layout (baseline reconstructed outside the engine in
+    # tests/_legacy_dual.py -- the shipped DualRidge no longer transposes).
+    from _legacy_dual import LegacyPreTransposeDual
+    from repro.core import SolverPlan, s_step_solve_sharded
+
+    w_leg, al_leg = s_step_solve_sharded(
+        LegacyPreTransposeDual(), SolverPlan(b=16, s=4), mesh, X, y, lam,
+        64, None, idx=idx2)
+    np.testing.assert_allclose(w_leg, w_d2, rtol=1e-12, atol=1e-14)
+    np.testing.assert_allclose(al_leg, al_d2, rtol=1e-12, atol=1e-14)
+
     # fused packet == unfused (same math, one collective)
     w_f, _ = ca_bcd_sharded(mesh, X, y, lam, 8, 8, 64, None, idx=idx,
                             fuse_packet=False)
@@ -198,7 +211,6 @@ def check_elastic_reshard():
         mesh8 = plan_mesh(8, tp=2)
         t1 = Trainer(cfg, rc, mesh=mesh8)
         t1.run()
-        loss_8dev = None
         # restart on 4 devices (simulated shrink)
         from repro import compat
         mesh4 = compat.device_mesh(

@@ -5,7 +5,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointManager
 from repro.data import TokenStream
@@ -101,8 +100,6 @@ def test_data_stream_exact_resume():
 
 def test_host_sharding_disjoint_union():
     """Per-host streams partition the global batch deterministically."""
-    full = TokenStream(vocab=50, seq_len=8, global_batch=4, seed=1,
-                       host_index=0, num_hosts=1)
     h0 = TokenStream(vocab=50, seq_len=8, global_batch=4, seed=1,
                      host_index=0, num_hosts=2)
     h1 = TokenStream(vocab=50, seq_len=8, global_batch=4, seed=1,
@@ -114,4 +111,3 @@ def test_host_sharding_disjoint_union():
     # determinism per host
     np.testing.assert_array_equal(h0.batch_at(3)["tokens"],
                                   h0.batch_at(3)["tokens"])
-    del full

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (bcd, bdcd, ca_bcd, ca_bdcd, cg_ridge, cg_ridge_history,
+from repro.core import (bcd, bdcd, ca_bcd, ca_bdcd, cg_ridge,
                         objective, ridge_exact, sample_blocks, tsqr,
                         tsqr_ridge)
 from repro.data import SyntheticSpec, make_regression

@@ -1,6 +1,5 @@
 """Cost-model (Table 1/2, Fig 8/9) verification: the structural claims of the
 paper hold in our alpha-beta-gamma implementation."""
-import numpy as np
 
 from repro.core.cost_model import (CORI_MPI, CORI_SPARK, bcd_costs, bdcd_costs,
                                    best_s, cg_costs, strong_scaling,

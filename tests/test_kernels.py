@@ -8,9 +8,11 @@ import pytest
 
 from _hyp import given, st
 
-from repro.kernels.gram import (gram, gram_packet, gram_packet_ref,
-                                gram_packet_sampled, gram_packet_sampled_ref,
-                                gram_ref, tuning)
+from repro.kernels.gram import (ColMajorOperand, gram, gram_packet,
+                                gram_packet_ref, gram_packet_sampled,
+                                gram_packet_sampled_cols_ref,
+                                gram_packet_sampled_ref, panel_apply,
+                                panel_apply_cols_ref, tuning)
 
 SHAPES = [(128, 512), (64, 300), (96, 1024), (8, 128), (130, 700), (256, 256)]
 DTYPES = [jnp.float32, jnp.bfloat16]
@@ -78,6 +80,39 @@ def test_gram_packet_sampled_matches_ref(shape, dtype):
     np.testing.assert_allclose(r1, r0, rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("shape", [(96, 512), (40, 300), (13, 128)])
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_gram_packet_sampled_cols_matches_ref(shape, dtype):
+    """The lane-slab column-gather kernel vs the jnp oracle: m sampled
+    columns of a (d, n) operand in its ORIGINAL layout, including
+    out-of-order and duplicate indices and ragged (m, d, n)."""
+    m, d = shape
+    pool = 2 * max(m, 16) + 5           # ragged column count (n % 128 != 0)
+    X = jax.random.normal(jax.random.key(20), (d, pool), dtype)
+    u = jax.random.normal(jax.random.key(21), (d,), dtype)
+    flat = jax.random.randint(jax.random.key(22), (m,), 0, pool, jnp.int32)
+    G1, r1 = gram_packet_sampled(ColMajorOperand(X), flat, u, scale=1.0 / d,
+                                 reg=0.01, impl="pallas_interpret")
+    G0, r0 = gram_packet_sampled_cols_ref(X, flat, u, 1.0 / d, 0.01)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(G1, G0, rtol=tol, atol=tol)
+    np.testing.assert_allclose(r1, r0, rtol=tol, atol=tol)
+
+
+def test_panel_apply_cols_matches_ref():
+    # f32 (this module runs without the x64 fixture): f32-level tolerances.
+    d, pool = 31, 200
+    X = jax.random.normal(jax.random.key(23), (d, pool), jnp.float32)
+    flat = jnp.asarray([3, 3, 0, 199, 8], jnp.int32)
+    v = jax.random.normal(jax.random.key(24), (5,), jnp.float32)
+    a0 = 0.7 * X[:, flat] @ v
+    np.testing.assert_allclose(panel_apply_cols_ref(X, flat, v, 0.7), a0,
+                               rtol=1e-5, atol=1e-5)
+    for impl in ("ref", "pallas_interpret"):
+        a1 = panel_apply(ColMajorOperand(X), flat, v, scale=0.7, impl=impl)
+        np.testing.assert_allclose(a1, a0, rtol=1e-5, atol=1e-5)
+
+
 def test_gram_only_kernel_skips_residual():
     """ops.gram dispatches to the residual-free kernel and still matches the
     packet's G (satellite: no zeros-u wasted work)."""
@@ -113,6 +148,30 @@ def test_tuning_register_and_snapshot():
     finally:
         tuning._TABLE.clear()
         tuning.register_table(snap)
+
+
+def test_tuning_layout_dimension():
+    """PR-5 satellite: table keys carry the operand layout.  Legacy
+    three-field keys load unchanged and mean row-major; a cols entry only
+    answers cols lookups; unknown layouts fail fast."""
+    snap = tuning.table_snapshot()
+    try:
+        tuning.register_table({"8,512,float32": (8, 512)})      # legacy key
+        assert tuning.pick_tiles(8, 512, jnp.float32) == (8, 512)
+        tuning.register_table({"8,512,float32,cols": (8, 64)})
+        assert tuning.pick_tiles(8, 512, jnp.float32, layout="cols") == (8, 64)
+        # the rows entry is untouched by the cols registration
+        assert tuning.pick_tiles(8, 512, jnp.float32) == (8, 512)
+        # cols heuristic fallback clamps to the padded operand
+        bm, bk = tuning.pick_tiles(5, 24, jnp.float32, layout="cols")
+        assert bm <= 8 and bk <= 24
+    finally:
+        tuning._TABLE.clear()
+        tuning.register_table(snap)
+    with pytest.raises(ValueError, match="unknown operand layout"):
+        tuning.pick_tiles(8, 512, jnp.float32, layout="diagonal")
+    with pytest.raises(ValueError, match="unknown operand layout"):
+        tuning.register_table({"8,512,float32,diagonal": (8, 64)})
 
 
 def test_solver_uses_kernel_consistently():

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from _hyp import given, settings, st
+from _hyp import given, st
 
 from repro.core import (bcd, bdcd, block_forward_substitution, ca_bcd,
                         ca_bdcd, overlap_matrix, sample_blocks, solve_spd)
