@@ -1,4 +1,4 @@
-.PHONY: test test-all test-fast bench bench-smoke
+.PHONY: test test-all test-fast bench bench-smoke check-contracts
 
 # Tier-1 verify (ROADMAP.md): the full suite, fail-fast.
 test:
@@ -21,3 +21,10 @@ bench:
 # packet vs the gather-then-pack baseline).
 bench-smoke:
 	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m benchmarks.run --smoke
+
+# Static contract sweep (DESIGN.md section 6): lower every registered solver
+# and verify the declared communication/memory contracts, validate kernel
+# plans, and lint source conventions.  Writes ANALYSIS.json; mirrors the CI
+# `contracts` job.
+check-contracts:
+	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m repro.analysis sweep -o ANALYSIS.json

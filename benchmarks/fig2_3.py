@@ -10,7 +10,7 @@ from repro.core import bcd, objective, ridge_exact
 from repro.core.cost_model import bcd_costs
 from repro.data import PAPER_DATASETS, make_regression
 
-from ._util import iters_to_accuracy, row, timed
+from ._util import iters_to_accuracy, row
 
 SWEEP = {
     "abalone": [1, 2, 4, 6],

@@ -113,8 +113,11 @@ def _dual_resident_rows(impl: str, d: int, n: int) -> list[str]:
 
         def bind(self, X, y, lam, *, x0=None, w_ref=None):
             bound = super().bind(X, y, lam, x0=x0, w_ref=w_ref)
-            return dataclasses.replace(bound,
-                                       operand=RowMajorOperand(X.T))
+            return dataclasses.replace(
+                bound,
+                # contract: allow-transpose -- this class IS the
+                # pre-transpose baseline being measured against.
+                operand=RowMajorOperand(X.T))
 
     b, s, iters = 8, 4, 8
     X = jax.random.normal(jax.random.key(7), (d, n), jnp.float32)

@@ -14,7 +14,7 @@ import sys
 
 from repro.core.cost_model import bcd_costs, bdcd_costs
 
-from ._util import row, timed
+from ._util import row
 
 _SUBPROC = r"""
 import os

@@ -1,0 +1,38 @@
+"""repro.analysis -- the static contract engine (DESIGN.md section 6).
+
+Three passes over everything the registry can dispatch, none of which runs a
+solver: the HLO contract pass (``hlo_pass``) lowers every registered
+(formulation, backend, impl, fuse_packet, ragged) combination and asserts the
+contracts each formulation declares via ``contracts()``; the kernel plan pass
+(``plan_pass``) validates every tuning-table entry and PacketPlan against
+VMEM/alignment/index-width limits; the convention lint pass (``lint``)
+enforces the AST-level repo rules ruff cannot express.
+
+CLI: ``python -m repro.analysis sweep`` (all three passes -> ANALYSIS.json)
+and ``python -m repro.analysis lint`` (lint only, jax-free).
+
+This ``__init__`` is import-light on purpose (PEP 562 lazy exports): the CLI
+must be able to set ``XLA_FLAGS`` before anything imports jax, and the lint
+pass must run in environments without jax at all.
+"""
+from __future__ import annotations
+
+_LAZY = {
+    "Report": "report", "PassReport": "report", "Violation": "report",
+    "run_hlo_pass": "hlo_pass",
+    "run_plan_pass": "plan_pass", "check_tiles": "plan_pass",
+    "check_plan": "plan_pass",
+    "run_lint": "lint", "lint_file": "lint",
+    "run_sweep": "__main__",
+    "expect_collectives": "api", "expect_clean": "api",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(f".{_LAZY[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

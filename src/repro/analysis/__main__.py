@@ -1,0 +1,82 @@
+"""CLI driver: ``python -m repro.analysis {sweep,lint}``.
+
+``sweep`` runs all three passes (HLO contracts, kernel plans, convention
+lint), writes ``ANALYSIS.json``, prints a summary, and exits nonzero on any
+violation -- the CI ``contracts`` job and ``make check-contracts`` both run
+exactly this.  ``lint`` runs the AST pass alone (no jax import, usable as a
+pre-commit hook).
+
+XLA_FLAGS is set BEFORE any jax import (the package __init__ is lazy for
+this reason): the HLO pass needs a multi-device host platform to lower the
+sharded backends, 8 forced host devices by default (override by exporting
+XLA_FLAGS yourself -- setdefault keeps a caller's choice).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+# Must precede any jax import anywhere in the process (run_hlo_pass imports
+# jax lazily, so setting it here is early enough for `python -m`).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+from .report import Report  # noqa: E402  (jax-free)
+
+
+def run_sweep(formulations=None) -> Report:
+    """All three passes -> one Report (importable; the tests drive this)."""
+    from .hlo_pass import run_hlo_pass
+    from .lint import run_lint
+    from .plan_pass import run_plan_pass
+
+    import jax
+
+    report = Report(meta={
+        "jax_version": jax.__version__,
+        "devices": len(jax.devices()),
+        "backend": jax.default_backend(),
+    })
+    report.passes.append(run_hlo_pass(formulations=formulations))
+    report.passes.append(run_plan_pass())
+    report.passes.append(run_lint(repo_root=os.getcwd()))
+    return report
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static contract engine (DESIGN.md section 6)")
+    sub = parser.add_subparsers(dest="cmd", required=True)
+
+    p_sweep = sub.add_parser(
+        "sweep", help="all three passes over the solver registry")
+    p_sweep.add_argument("-o", "--output", default="ANALYSIS.json",
+                         help="report path (default: ANALYSIS.json)")
+    p_sweep.add_argument("--formulation", action="append", default=None,
+                         help="restrict to one formulation (repeatable)")
+
+    p_lint = sub.add_parser("lint", help="convention lint pass only (no jax)")
+    p_lint.add_argument("paths", nargs="*", default=None,
+                        help="files/trees to lint (default: src scripts "
+                             "examples benchmarks)")
+
+    args = parser.parse_args(argv)
+
+    if args.cmd == "lint":
+        from .lint import run_lint
+        rep = run_lint(paths=args.paths or None, repo_root=os.getcwd())
+        report = Report(passes=[rep])
+        print(report.summary())
+        return 0 if report.ok else 1
+
+    report = run_sweep(formulations=args.formulation)
+    with open(args.output, "w", encoding="utf-8") as f:
+        f.write(report.to_json() + "\n")
+    print(report.summary())
+    print(f"report written to {args.output}")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,43 @@
+"""Assertion helpers over the shared HLO parser -- the one API runtime tests
+use to pin collective schedules (tests/dist_checks.py), so test assertions and
+the contract sweep read the SAME parse of the same text.
+
+``expect_collectives`` asserts an exact count of the allowed kinds and zero
+of any other cross-device collective; ``expect_clean`` is the zero-collective
+form.  Both accept a jax ``Compiled`` or raw HLO text and raise
+``AssertionError`` with the offending op lines (the subprocess checks bubble
+these straight to pytest's output).
+"""
+from __future__ import annotations
+
+
+def _hlo_text(compiled_or_text) -> str:
+    if isinstance(compiled_or_text, str):
+        return compiled_or_text
+    return compiled_or_text.as_text()
+
+
+def expect_collectives(compiled_or_text, count: int,
+                       kinds: tuple = ("all-reduce",),
+                       subject: str = "lowering"):
+    """Assert exactly ``count`` collectives of ``kinds`` and none of any
+    other kind; returns the parsed ops for further inspection."""
+    from repro.core.hlo_analysis import parse_collectives
+
+    ops = parse_collectives(_hlo_text(compiled_or_text))
+    allowed = set(kinds)
+    stray = [op for op in ops if op.kind not in allowed]
+    assert not stray, (
+        f"{subject}: {len(stray)} disallowed collective(s) "
+        f"(allowed {sorted(allowed)}): "
+        + "; ".join(op.line for op in stray[:4]))
+    n = sum(1 for op in ops if op.kind in allowed)
+    assert n == count, (
+        f"{subject}: expected exactly {count} {'+'.join(kinds)}, found {n}: "
+        + ("; ".join(op.line.split(' = ')[0] for op in ops) or "<none>"))
+    return ops
+
+
+def expect_clean(compiled_or_text, subject: str = "lowering"):
+    """Assert the lowering carries NO cross-device collectives at all."""
+    return expect_collectives(compiled_or_text, 0, kinds=(), subject=subject)

@@ -1,0 +1,213 @@
+"""HLO contract pass: lower every registered solver, check declared contracts.
+
+For each formulation in the registry this pass lowers the solver over the
+full configuration matrix -- backend (local/sharded), impl (ref /
+pallas_interpret), fuse_packet (True/False), even and ragged iteration counts
+-- on ABSTRACT inputs (no math runs; only XLA does), parses the compiled HLO
+through ``repro.core.hlo_analysis``, and asserts the contracts the
+formulation DECLARES via its ``contracts()`` hook
+(:class:`repro.core.engine.SolverContracts`):
+
+* collective-count: the sharded lowering carries exactly
+  ``sync_per_outer * H`` collectives, all of the declared kinds
+  (``H = iters//s + (iters % s != 0)`` -- the paper's one-reduction-per-
+  outer-iteration claim, ragged tail included).  Lowered at
+  ``unroll = iters // s`` so the scanned outer loop is fully unrolled and
+  the static op count equals the dynamic one.
+* local-collective-free: the local backend lowers to ZERO collectives.
+* operand-transpose-free: no ``transpose`` op whose result is the local
+  operand shape (either orientation) -- the PR-5 "dual binds the original
+  layout" guarantee.  Checked on sharded lowerings (the local metrics path
+  legitimately reads ``X.T @ w``; see the allow-transpose waivers).
+* panel-free: for impls in ``panel_free_impls``, no gather/fusion op
+  materializes the (sb, contraction) sampled panel -- the PR-2 guarantee
+  that only the ref impl builds ``Y = X[idx]``.
+* f64-packet: under the x64 config every collective carries f64 (one extra
+  sharded lowering per formulation, at dtype=float64).
+
+Sweep shapes are chosen so the shapes the checks key on are PAIRWISE
+DISTINCT (sb=8, d/P=16, n/P=32, d=16P, n=32P): a square sb x sb transpose
+from the symmetric-skip Gram mirror can never alias the operand shape, and a
+(bm, bk) kernel tile can alias the panel only when it IS the panel.
+"""
+from __future__ import annotations
+
+from .report import PassReport, Violation
+
+# Sweep geometry (per device count P, fixed at run time): every shape class
+# distinct, ragged tail exercised by ITERS_RAGGED % S != 0.
+B, S = 4, 2
+ITERS_EVEN, ITERS_RAGGED = 4, 3
+D_PER_P, N_PER_P = 16, 32
+IMPLS = ("ref", "pallas_interpret")
+
+
+def _outer_count(iters: int, s: int) -> int:
+    return iters // s + (1 if iters % s else 0)
+
+
+def _contracts_of(form):
+    from repro.core.engine import SolverContracts
+    hook = getattr(form, "contracts", None)
+    return hook() if hook is not None else SolverContracts()
+
+
+def _panel_shapes(sb: int, contraction: int) -> set:
+    return {(sb, contraction), (contraction, sb)}
+
+
+def _check_collectives(txt, contract, expected, subject, violations):
+    """Count + kind check through the one shared parser."""
+    from repro.core.hlo_analysis import parse_collectives
+    ops = parse_collectives(txt)
+    allowed = set(contract.collective_kinds)
+    for op in ops:
+        if op.kind not in allowed:
+            violations.append(Violation(
+                "collective-kind", subject,
+                f"disallowed {op.kind} (declared kinds {sorted(allowed)}): "
+                f"{op.line}"))
+    n = sum(1 for op in ops if op.kind in allowed)
+    if n != expected:
+        lines = "; ".join(op.line.split(" = ")[0] for op in ops) or "<none>"
+        violations.append(Violation(
+            "collective-count", subject,
+            f"expected exactly {expected} collective(s) "
+            f"({'+'.join(contract.collective_kinds)}), found {n}: {lines}"))
+
+
+def _check_no_transpose(txt, operand_shape, subject, violations):
+    from repro.core.hlo_analysis import parse_named_ops
+    bad = {tuple(operand_shape), tuple(reversed(operand_shape))}
+    for op in parse_named_ops(txt, opcodes=("transpose",)):
+        for shape in op.shapes():
+            if shape in bad:
+                violations.append(Violation(
+                    "operand-transpose", subject,
+                    f"transpose materializes the operand layout "
+                    f"{shape}: {op.line}"))
+
+
+def _check_panel_free(txt, sb, contraction, subject, violations):
+    """A materialized ``Y = X[idx]`` lowers to a panel-shaped ``gather`` op
+    (or a fusion XLA names after the gather it absorbed, e.g.
+    ``%bitcast_gather_fusion``).  The kernels' interpret-mode scratch
+    emulation also carries panel-shaped tiles at these tiny sweep shapes,
+    but those are dynamic-(update-)slice fusions -- no gather -- so keying
+    on the gather distinguishes "materialized the panel" from "the tile
+    covers the whole panel"."""
+    from repro.core.hlo_analysis import parse_named_ops
+    bad = _panel_shapes(sb, contraction)
+    for op in parse_named_ops(txt, opcodes=("gather", "fusion")):
+        if op.opcode == "fusion" and "gather" not in op.result_name:
+            continue
+        for shape in op.shapes():
+            if shape in bad:
+                violations.append(Violation(
+                    "panel-materialized", subject,
+                    f"{op.opcode} materializes the ({sb}, {contraction}) "
+                    f"sampled panel outside the kernel: {op.line}"))
+
+
+def _case_geometry(form, P):
+    """(d, n, sb, local operand shape, local contraction length)."""
+    d, n = D_PER_P * P, N_PER_P * P
+    sb = S * B
+    if form.operand_layout == "rows":          # primal family: shard columns
+        op_shape, contraction = (d, n // P), n // P
+    else:                                      # dual: shard rows
+        op_shape, contraction = (d // P, n), d // P
+    return d, n, sb, op_shape, contraction
+
+
+def run_hlo_pass(formulations=None) -> PassReport:
+    """Sweep the solver registry; returns the pass report.
+
+    Requires >= 2 jax devices for the sharded matrix (the CLI forces 8 host
+    devices); sharded cases are recorded as skipped otherwise.
+    """
+    import jax
+
+    import repro.core  # noqa: F401  (imports register the built-in solvers)
+    from repro.core.distributed import (lower_solver, lower_solver_local,
+                                        make_solver_mesh)
+    from repro.core.engine import FORMULATIONS, registered_solvers
+    from repro.core.hlo_analysis import collective_dtypes
+
+    rep = PassReport("hlo")
+    lam = 1e-3
+    P = len(jax.devices())
+    mesh = make_solver_mesh() if P > 1 else None
+    backends = {name: set() for name in FORMULATIONS}
+    for name, backend in registered_solvers():
+        backends.setdefault(name, set()).add(backend)
+    names = sorted(formulations) if formulations else sorted(backends)
+
+    for name in names:
+        form = FORMULATIONS[name]
+        contract = _contracts_of(form)
+        kw = dict(contract.lowering_kwargs)
+        d, n, sb, op_shape, contraction = _case_geometry(form, max(P, 1))
+
+        # ---- local backend: must lower to zero collectives ----------------
+        if "local" in backends.get(name, ()):
+            for impl in IMPLS:
+                for iters in (ITERS_EVEN, ITERS_RAGGED):
+                    case = rep.case(f"{name}/local[impl={impl},iters={iters}]")
+                    compiled = lower_solver_local(
+                        name, d, n, lam, B, S, iters, impl=impl, **kw)
+                    txt = compiled.as_text()
+                    if contract.local_collective_free:
+                        _check_collectives(txt, contract, 0, case,
+                                           rep.violations)
+                    if impl in contract.panel_free_impls:
+                        _check_panel_free(txt, sb, n if form.operand_layout
+                                          == "rows" else d, case,
+                                          rep.violations)
+
+        # ---- sharded backend: H collectives, no operand transpose ---------
+        if "sharded" in backends.get(name, ()):
+            if mesh is None:
+                rep.skip(f"{name}/sharded", "needs >= 2 devices")
+                continue
+            for impl in IMPLS:
+                for fuse in (True, False):
+                    for iters in (ITERS_EVEN, ITERS_RAGGED):
+                        case = rep.case(
+                            f"{name}/sharded[impl={impl},fuse={fuse},"
+                            f"iters={iters}]")
+                        compiled = lower_solver(
+                            name, mesh, d, n, lam, B, S, iters,
+                            fuse_packet=fuse, impl=impl,
+                            unroll=max(iters // S, 1), **kw)
+                        txt = compiled.as_text()
+                        H = _outer_count(iters, S)
+                        _check_collectives(txt, contract,
+                                           contract.sync_per_outer * H,
+                                           case, rep.violations)
+                        if contract.operand_transpose_free:
+                            _check_no_transpose(txt, op_shape, case,
+                                                rep.violations)
+                        if impl in contract.panel_free_impls:
+                            _check_panel_free(txt, sb, contraction, case,
+                                              rep.violations)
+
+            # ---- one x64 lowering: the packet must reduce in f64 ----------
+            if contract.f64_packet:
+                case = rep.case(f"{name}/sharded[x64]")
+                x64_was = jax.config.jax_enable_x64
+                jax.config.update("jax_enable_x64", True)
+                try:
+                    import jax.numpy as jnp
+                    compiled = lower_solver(
+                        name, mesh, d, n, lam, B, S, ITERS_EVEN,
+                        dtype=jnp.float64, unroll=ITERS_EVEN // S, **kw)
+                    dts = collective_dtypes(compiled.as_text())
+                finally:
+                    jax.config.update("jax_enable_x64", x64_was)
+                if dts != {"f64"}:
+                    rep.violations.append(Violation(
+                        "f64-packet", case,
+                        f"x64 lowering reduces in {sorted(dts)}, expected "
+                        "all collectives to carry f64"))
+    return rep

@@ -1,0 +1,111 @@
+"""Kernel plan pass: validate tile plans against hardware limits, statically.
+
+A bad ``PacketPlan`` or autotune-table entry today fails inside a Mosaic
+compile (cryptically, on the TPU it first runs on) or silently under-utilizes
+VMEM.  This pass checks every plan the repo can dispatch -- the live tuning
+table (built-ins + anything merged via ``REPRO_GRAM_TUNING``), the per-layout
+heuristic defaults, and any explicit :class:`~repro.kernels.gram.ops.PacketPlan`
+a caller hands in -- against constraints computed WITHOUT running a kernel:
+
+* vmem-budget: the static scratch footprint of the layout's Gram/apply
+  kernels at (bm, bk) -- ``repro.core.cost_model.kernel_vmem_bytes``, which
+  models the declared ``scratch_shapes`` of ``sampled_kernel.py`` /
+  ``sampled_colmajor.py`` (the column layout carries the LANE-amplified
+  slabs) -- must fit ``cost_model.VMEM_BYTES_PER_CORE``.
+* tile-alignment: ``bm`` on the 8-row sublane granule; ``bk`` on the
+  128-lane granule for the row layout and the sublane granule for the
+  column layout (its contraction runs over X's rows).
+* bucket-consistency: a table entry whose tile exceeds its own
+  (m_bucket, n_bucket) key can never be returned un-clamped -- dead weight
+  that signals a mis-keyed autotune merge.
+* index-arithmetic: the scalar-prefetched gather indexes the operand with
+  int32; a bucket whose element count exceeds int32 range would overflow
+  the kernel's DMA offset arithmetic.
+"""
+from __future__ import annotations
+
+from .report import PassReport, Violation
+
+_INT32_MAX = 2**31 - 1
+
+
+def _itemsize(dtype_name: str) -> int:
+    return {"float64": 8, "float32": 4, "bfloat16": 2, "float16": 2}.get(
+        dtype_name, 4)
+
+
+def check_tiles(bm: int, bk: int, dtype_name: str, layout: str,
+                subject: str) -> list:
+    """Contract checks for one (bm, bk) tile choice; returns violations."""
+    from repro.core import cost_model
+    from repro.kernels.gram.tuning import LANE_GRANULE, LAYOUTS, ROW_GRANULE
+
+    out = []
+    if layout not in LAYOUTS:
+        return [Violation("tile-layout", subject,
+                          f"unknown layout {layout!r}, expected {LAYOUTS}")]
+    k_granule = LANE_GRANULE if layout == "rows" else ROW_GRANULE
+    if bm % ROW_GRANULE:
+        out.append(Violation(
+            "tile-alignment", subject,
+            f"bm={bm} is not a multiple of the {ROW_GRANULE}-row sublane "
+            "granule"))
+    if bk % k_granule:
+        out.append(Violation(
+            "tile-alignment", subject,
+            f"bk={bk} is not a multiple of the {k_granule}-wide contraction "
+            f"granule for layout={layout!r}"))
+    need = cost_model.kernel_vmem_bytes(bm, bk, _itemsize(dtype_name),
+                                        layout=layout)
+    budget = cost_model.VMEM_BYTES_PER_CORE
+    if need > budget:
+        out.append(Violation(
+            "vmem-budget", subject,
+            f"(bm={bm}, bk={bk}, {dtype_name}, layout={layout!r}) needs "
+            f"{need / 2**20:.1f} MiB of VMEM scratch, budget is "
+            f"{budget / 2**20:.1f} MiB"))
+    return out
+
+
+def check_plan(plan, dtype_name: str = "float32",
+               layout: str = "rows", subject: str | None = None) -> list:
+    """Validate one explicit :class:`PacketPlan` (only pinned knobs are
+    checkable; ``None`` tiles defer to the table, which is swept anyway)."""
+    from repro.kernels.gram.ops import _IMPLS
+
+    subject = subject or f"PacketPlan(impl={plan.impl}, bm={plan.bm}, bk={plan.bk})"
+    out = []
+    if plan.impl is not None and plan.impl not in _IMPLS:
+        out.append(Violation("plan-impl", subject,
+                             f"impl {plan.impl!r} not in {_IMPLS}"))
+    if plan.bm is not None and plan.bk is not None:
+        out.extend(check_tiles(plan.bm, plan.bk, dtype_name, layout, subject))
+    return out
+
+
+def run_plan_pass(extra_plans=()) -> PassReport:
+    """Sweep the live tuning table + heuristic defaults (+ caller plans)."""
+    from repro.kernels.gram.tuning import _DEFAULTS, table_entries
+
+    rep = PassReport("plan")
+    for (mb, nb, dtype_name, layout), (bm, bk) in table_entries():
+        subject = rep.case(f"table[{mb},{nb},{dtype_name},{layout}]"
+                           f" -> (bm={bm}, bk={bk})")
+        rep.violations.extend(check_tiles(bm, bk, dtype_name, layout, subject))
+        if bm > mb or bk > nb:
+            rep.violations.append(Violation(
+                "bucket-consistency", subject,
+                f"tile (bm={bm}, bk={bk}) exceeds its own bucket "
+                f"({mb}, {nb}); pick_tiles would always clamp it"))
+        if mb * nb > _INT32_MAX:
+            rep.violations.append(Violation(
+                "index-arithmetic", subject,
+                f"bucket holds {mb * nb} elements > int32 max; the "
+                "scalar-prefetched gather offsets would overflow"))
+    for layout, (bm, bk) in sorted(_DEFAULTS.items()):
+        subject = rep.case(f"default[{layout}] -> (bm={bm}, bk={bk})")
+        rep.violations.extend(check_tiles(bm, bk, "float32", layout, subject))
+    for plan, dtype_name, layout in extra_plans:
+        subject = rep.case(f"plan[{plan!r},{dtype_name},{layout}]")
+        rep.violations.extend(check_plan(plan, dtype_name, layout, subject))
+    return rep

@@ -3,9 +3,9 @@ dual block coordinate descent (CA-BCD / CA-BDCD) for regularized least squares,
 plus the baselines it is compared against (CG, TSQR) and the alpha-beta-gamma
 cost model used for the modeled scaling experiments."""
 from .engine import (FORMULATIONS, DualRidge, Formulation, PrimalRidge,
-                     SolveResult, SolverPlan, get_solver, register_formulation,
-                     register_solver, registered_solvers, s_step_solve,
-                     s_step_solve_sharded)
+                     SolveResult, SolverContracts, SolverPlan, get_solver,
+                     register_formulation, register_solver,
+                     registered_solvers, s_step_solve, s_step_solve_sharded)
 from .bcd import bcd, ca_bcd, objective
 from .bdcd import bdcd, ca_bdcd
 from .proximal import (ProximalElasticNet, ca_proximal_bcd,
@@ -33,7 +33,8 @@ __all__ = [
     "cholqr_r",
     "bcd_sharded", "bdcd_sharded", "ca_bcd_sharded", "ca_bdcd_sharded",
     "lower_solver", "make_solver_mesh",
-    "SolverPlan", "PacketPlan", "Formulation", "PrimalRidge", "DualRidge",
+    "SolverPlan", "SolverContracts", "PacketPlan", "Formulation",
+    "PrimalRidge", "DualRidge",
     "ProximalElasticNet", "FORMULATIONS", "s_step_solve",
     "s_step_solve_sharded", "get_solver", "register_formulation",
     "register_solver", "registered_solvers",

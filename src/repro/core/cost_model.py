@@ -223,6 +223,37 @@ def dual_operand_tradeoff(d: int, n: int, sb: int, itemsize: int = 4,
     }
 
 
+# Per-core VMEM on the target parts (TPU v4/v5e: ~16 MiB).  The plan pass
+# (repro.analysis.plan_pass) validates every tuning-table entry and PacketPlan
+# against this budget; keep it in the cost model so the modeled and the
+# checked footprints come from one place.
+VMEM_BYTES_PER_CORE = 16 * 1024 * 1024
+
+
+def kernel_vmem_bytes(bm: int, bk: int, itemsize: int = 4,
+                      layout: str = "rows", lane: int = 128) -> float:
+    """Static VMEM footprint of the Gram-packet kernels at (bm, bk) tiles --
+    the max over the layout's gram and apply kernels, from their declared
+    scratch + block shapes (sampled_kernel.py / sampled_colmajor.py):
+
+    * ``rows`` gram: two gathered (bm, bk) panels + the (bm, bm) G tile +
+      the bk-length u tile and bm-length r tile.
+    * ``cols`` gram: two extracted (bm, bk) panels + two (bm, bk, lane)
+      slabs (the lane-aligned fetch) + the same G/u/r tiles.
+    * apply kernels hold one panel (+ one slab for ``cols``) + the bk/bm
+      vector tiles; always <= the gram footprint, kept for completeness.
+
+    No double-buffering multiplier: the gathered panels are scratch (manually
+    DMA'd), not pipelined BlockSpec operands.
+    """
+    if layout not in ("rows", "cols"):
+        raise ValueError(f"unknown layout {layout!r}")
+    slab = bm * bk * lane if layout == "cols" else 0
+    gram = 2 * bm * bk + 2 * slab + bm * bm + bk + bm
+    apply_ = bm * bk + slab + bk + bm
+    return float(max(gram, apply_) * itemsize)
+
+
 def packet_memory_time(sb: int, n: int, hbm_bytes_per_s: float,
                        itemsize: int = 4, panel_free: bool = True,
                        bm: int = 128) -> float:

@@ -185,3 +185,24 @@ def lower_solver(solver, mesh: Mesh, d: int, n: int, lam: float, b: int, s: int,
                      tiles=tiles, **solver_kw)
 
     return jax.jit(run).lower(X, y, key).compile()
+
+
+def lower_solver_local(formulation: str, d: int, n: int, lam: float, b: int,
+                       s: int, iters: int, *, dtype=jnp.float32,
+                       impl: str | None = None,
+                       tiles: tuple[int, int] | None = None, **solver_kw):
+    """Lower+compile the LOCAL (single-device) registry solver on abstract
+    operands.  The contract engine uses this to assert the local backend is
+    collective-free and (for pallas impls) panel-free; mirrors
+    :func:`lower_solver` but needs no mesh and no sharding derivation."""
+    solve = get_solver(formulation, "local")
+    X = jax.ShapeDtypeStruct((d, n), dtype)
+    y = jax.ShapeDtypeStruct((n,), dtype)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    def run(Xv, yv, keyv):
+        return solve(Xv, yv, lam, b, s, iters,
+                     jax.random.wrap_key_data(keyv), impl=impl, tiles=tiles,
+                     **solver_kw)
+
+    return jax.jit(run).lower(X, y, key).compile()

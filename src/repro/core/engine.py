@@ -71,6 +71,54 @@ class SolveResult(NamedTuple):
 
 
 @dataclasses.dataclass(frozen=True)
+class SolverContracts:
+    """The communication/memory guarantees a formulation DECLARES -- and the
+    static contract engine (``repro.analysis``) verifies against every
+    registered lowering.
+
+    The paper's headline result is a contract, not a number: CA-BCD/CA-BDCD
+    synchronize exactly once per outer iteration (arXiv:1612.04003), the
+    proximal variant inherits the same structure (arXiv:1712.06047), and the
+    PR-2/PR-5 guarantees (panel never materializes; the dual binds the
+    original layout with no transpose) are structural properties of the
+    compiled HLO.  Each formulation states its invariants here instead of
+    inheriting silent assumptions; ``python -m repro.analysis sweep`` lowers
+    every ``(formulation, backend)`` registry entry and fails when a declared
+    contract breaks.  A formulation without a ``contracts()`` hook FAILS the
+    sweep -- declaring is mandatory, not optional.
+
+    * ``sync_per_outer``: collectives per outer iteration on the sharded
+      backend (1 for every paper formulation -- the single packet
+      all-reduce).  A future pipelined-collective formulation would declare
+      its own count here rather than silently widening the budget.
+    * ``collective_kinds``: the only collective opcodes allowed to appear in
+      the sharded lowering at all.
+    * ``local_collective_free``: the local backend must lower with ZERO
+      cross-device collectives.
+    * ``operand_transpose_free``: no HLO transpose of the bound operand's
+      (local) array anywhere in the sharded solve body -- the PR-5 "no dual
+      pre-transpose" guarantee, checked shape-against-shape.
+    * ``panel_free_impls``: kernel backends whose lowering must never
+      materialize the sampled ``(sb, contraction)`` panel outside a Pallas
+      custom-call (the ``impl="ref"`` path gathers the panel by design, so
+      it is not listed).
+    * ``f64_packet``: under the x64 test path every collective must move f64
+      words (the packet may not silently downcast accumulation).
+    * ``lowering_kwargs``: extra solver kwargs ((key, value) pairs) the
+      analysis engine passes when lowering this formulation abstractly, so
+      formulation-specific code paths (e.g. the proximal soft-threshold at
+      ``lam1 > 0``) are the ones verified.
+    """
+    sync_per_outer: int = 1
+    collective_kinds: tuple = ("all-reduce",)
+    local_collective_free: bool = True
+    operand_transpose_free: bool = True
+    panel_free_impls: tuple = ("pallas", "pallas_interpret")
+    f64_packet: bool = True
+    lowering_kwargs: tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
 class SolverPlan:
     """Everything the engine needs to know besides the problem data.
 
@@ -158,6 +206,7 @@ class Formulation(Protocol):
     name: str
     operand_layout: str
 
+    def contracts(self) -> SolverContracts: ...
     def sample_dim(self, d: int, n: int) -> int: ...
     def bind(self, X, y, lam, *, x0=None, w_ref=None) -> BoundFormulation: ...
     def pad_shards(self, X, y, n_shards: int) -> tuple: ...
@@ -225,6 +274,9 @@ class _BoundPrimal:
             # alpha is device-varying (each shard owns a slice of R^n); w is
             # replicated.  Warm starts are a single-device affordance.
             return w, compat.pvary(jnp.zeros(self.y.shape, X.dtype), axes)
+        # contract: allow-transpose -- one-time warm-start init, not the
+        # solve path (the hot loop's transpose-free-ness is what the HLO
+        # contract pass pins; repro/analysis/lint.py enforces this comment).
         alpha = X.T @ w if self.w0 is not None else jnp.zeros((self.n,), X.dtype)
         return w, alpha
 
@@ -255,6 +307,12 @@ class PrimalRidge:
     """(CA-)BCD: samples features (rows of X); 1D-block-column layout."""
     name = "primal"
     operand_layout = "rows"
+
+    def contracts(self):
+        # Theorem 1/6 structure: ONE fused packet all-reduce per outer
+        # iteration, nothing else on the wire; row-major operand, no
+        # transpose, panel-free kernel path.
+        return SolverContracts()
 
     def sample_dim(self, d, n):
         return d
@@ -357,6 +415,9 @@ class _BoundDual:
         # distributed fast path skips metrics entirely.
         w, alpha = carry
         n = self.n
+        # contract: allow-transpose -- metric evaluation on the full X
+        # (local mode only; the distributed fast path skips metrics and the
+        # HLO pass verifies its lowering is transpose-free).
         r = self.X.T @ w - self.y
         m = {"objective": 0.5 / n * (r @ r) + 0.5 * self.lam * (w @ w)}
         if self.w_ref is not None:
@@ -369,6 +430,12 @@ class DualRidge:
     (d, n) layout via the column-major operand; 1D-block-row layout."""
     name = "dual"
     operand_layout = "cols"
+
+    def contracts(self):
+        # Theorem 2/7 structure, plus the PR-5 guarantee this formulation
+        # exists to keep: the ORIGINAL (d, n) layout is never transposed
+        # anywhere in the sharded solve body.
+        return SolverContracts()
 
     def sample_dim(self, d, n):
         return n

@@ -1,17 +1,34 @@
-"""HLO collective-op analysis.
+"""HLO op analysis: the one parser behind every ``compiled.as_text()`` reader.
 
 This is the measurement backbone for (a) the paper's latency claim -- the
 number of collectives on the critical path drops by exactly ``s`` in CA-BCD /
 CA-BDCD, which we verify by counting ops in compiled HLO -- and (b) the
 roofline collective term, which ``cost_analysis()`` does not report, so we
 parse ``compiled.as_text()`` and sum operand sizes of every all-gather /
-all-reduce / reduce-scatter / all-to-all / collective-permute op.
+all-reduce / reduce-scatter / all-to-all / collective-permute op.  The static
+contract engine (``repro.analysis``) builds its HLO pass on the same parser:
+:func:`parse_named_ops` generalizes the line scan to arbitrary opcodes
+(transpose, gather, fusion) so the PR-5 "no dual pre-transpose" and PR-2
+"panel never materializes" guarantees are checked from one source of truth.
 
-Conventions (verified against jax 0.8.2 CPU-backend HLO):
-  %name = f32[8,8]{1,0} all-reduce(%op), channel_id=1, replica_groups=[2,4]<=[8], ...
-Result-shape bytes are parsed from the type; operand bytes are derived per op
-kind (all-gather results are group_size x the operand, reduce-scatter the
-inverse).  ``-start`` ops are counted once, ``-done`` ops skipped.
+Conventions, re-verified against the pinned JAX 0.4.37 CPU-backend HLO (the
+docstring previously claimed 0.8.2 -- drift; fixture snapshots of the real
+0.4.37 output live in ``tests/fixtures/hlo/`` so the parser is unit-tested
+without a live compile):
+
+  %name = f32[8,9]{1,0} all-reduce(f32[8,9]{1,0} %op), channel_id=1,
+      replica_groups={{0,1,2,3,4,5,6,7}}, use_global_device_ids=true, ...
+
+* ``replica_groups`` appears in BOTH forms on 0.4.37: the brace form
+  ``{{0,1,...}}`` (shard_map/GSPMD output, group size = ids per group) and
+  the iota form ``[2,4]<=[8]`` (group size = second bracket entry).
+* Async collectives split into ``-start``/``-done`` pairs; the ``-start``
+  result is the tuple ``(operand-shape(s), result-shape(s))``, so its summed
+  byte size is halved and the ``-done`` line is skipped -- each logical
+  collective is counted exactly once.
+* Result-shape bytes are parsed from the type; operand bytes are derived per
+  op kind (all-gather results are group_size x the operand, reduce-scatter
+  the inverse).
 """
 from __future__ import annotations
 
@@ -144,3 +161,83 @@ def collective_summary(hlo_text: str, total_devices: int | None = None) -> Colle
 def count_in_compiled(compiled) -> CollectiveSummary:
     """Summary for a jax ``Compiled`` object."""
     return collective_summary(compiled.as_text())
+
+
+# ---------------------------------------------------------------------------
+# Generic named-op scan -- the contract engine's view of the HLO text.
+# ---------------------------------------------------------------------------
+
+# An HLO instruction line:  %name = TYPE opcode(OPERANDS), attrs...
+# TYPE is either a tuple "(f32[..], ...)" or "dtype[dims]{layout}".
+_NAMED_OP_RE = re.compile(
+    r"(?P<result>%[\w.\-]+)\s*=\s*"
+    r"(?P<type>\([^=]*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<opcode>[a-z][a-z0-9\-]*)\(")
+
+
+@dataclasses.dataclass(frozen=True)
+class HloOp:
+    """One parsed HLO instruction: opcode, result shapes, raw line."""
+    opcode: str
+    result_name: str
+    # ((dtype, (dims...)), ...): every dtype[...] in the result type -- one
+    # entry for plain results, several for tuple-shaped (-start) results.
+    result_shapes: tuple
+    line: str
+
+    def shapes(self) -> tuple:
+        """Just the dim tuples, dtype dropped."""
+        return tuple(dims for _, dims in self.result_shapes)
+
+    def dtypes(self) -> tuple:
+        return tuple(dt for dt, _ in self.result_shapes)
+
+
+def _parse_shapes(type_str: str) -> tuple:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue  # not a dtype token (layout/sharding noise)
+        out.append((dtype, tuple(int(p) for p in dims.split(",")) if dims else ()))
+    return tuple(out)
+
+
+def parse_named_ops(hlo_text: str, opcodes: Iterable[str] | None = None) -> list[HloOp]:
+    """Scan HLO text for instruction lines, optionally filtered by opcode.
+
+    The contract engine uses this for the non-collective checks: ``transpose``
+    ops whose result is operand-shaped (the legacy dual pre-transpose),
+    ``gather``/``fusion`` ops whose result is a materialized (sb, n_local)
+    panel, and dtype inspection of the collectives for the f64 packet check.
+    Operand shapes inside the parens are deliberately NOT parsed -- result
+    shapes are enough to identify every contract violation by shape, and the
+    operand syntax varies more across JAX versions.
+    """
+    wanted = set(opcodes) if opcodes is not None else None
+    ops: list[HloOp] = []
+    for line in hlo_text.splitlines():
+        m = _NAMED_OP_RE.search(line)
+        if not m:
+            continue
+        opcode = m.group("opcode")
+        if wanted is not None and opcode not in wanted:
+            continue
+        ops.append(HloOp(opcode, m.group("result"),
+                         _parse_shapes(m.group("type")), line.strip()[:200]))
+    return ops
+
+
+def collective_dtypes(hlo_text: str) -> set:
+    """Dtypes carried by every counted collective (``-done`` lines skipped).
+
+    Backs the f64-packet contract: under the x64 test path every packet
+    reduction must accumulate in f64, so this set must be ``{"f64"}``.
+    """
+    dts: set[str] = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m or m.group("phase") == "-done":
+            continue
+        for dt, _ in _parse_shapes(m.group("type")):
+            dts.add(dt)
+    return dts

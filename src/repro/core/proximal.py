@@ -41,10 +41,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .engine import (RowMajorOperand, SolveResult, SolverPlan, _BoundPrimal,
-                     _objective_from_alpha, _pad_to, _sol_err,
-                     register_formulation, register_solver, s_step_solve,
-                     s_step_solve_sharded)
+from .engine import (RowMajorOperand, SolveResult, SolverContracts,
+                     SolverPlan, _BoundPrimal, _objective_from_alpha, _pad_to,
+                     _sol_err, register_formulation, register_solver,
+                     s_step_solve, s_step_solve_sharded)
 from .sampling import overlap_matrix
 from .subproblem import (block_forward_substitution,
                          block_forward_substitution_prox, soft_threshold)
@@ -109,6 +109,14 @@ class ProximalElasticNet:
         # inflation step that silently diverges instead of sparsifying.
         if not self.lam1 >= 0:
             raise ValueError(f"lam1={self.lam1!r} must be >= 0")
+
+    def contracts(self):
+        # The soft-threshold runs on the replicated post-reduce packet, so
+        # the nonsmooth term adds ZERO communication: same contract as the
+        # primal ridge.  ``lowering_kwargs`` makes the analysis engine lower
+        # with lam1 > 0 so the prox code path (not the lam1=0 ridge branch)
+        # is the one verified.
+        return SolverContracts(lowering_kwargs=(("lam1", 1e-3),))
 
     def sample_dim(self, d, n):
         return d

@@ -144,6 +144,15 @@ def table_snapshot() -> dict[str, tuple[int, int]]:
     return {f"{k[0]},{k[1]},{k[2]},{k[3]}": v for k, v in sorted(_TABLE.items())}
 
 
+def table_entries() -> list[tuple[tuple[int, int, str, str], tuple[int, int]]]:
+    """Sorted (key, (bm, bk)) pairs of the LIVE table -- built-ins plus
+    anything merged via register_table/REPRO_GRAM_TUNING.  The static plan
+    pass (``repro.analysis.plan_pass``) sweeps these against the VMEM budget
+    and alignment granules, so a bad autotune table fails in CI instead of
+    inside a Mosaic compile."""
+    return sorted(_TABLE.items())
+
+
 _env_table = os.environ.get("REPRO_GRAM_TUNING")
 if _env_table:
     # Setting the env var is an explicit opt-in: a bad path must fail loudly,

@@ -1,0 +1,137 @@
+"""Contract-engine checks run in a subprocess with an 8-device CPU world
+(tests/test_analysis.py drives this; the main pytest process keeps 1 device).
+
+The mutation checks are the engine's proof of teeth: each registers a
+deliberately-broken formulation in the REAL registry and asserts the sweep
+fails on it with a message naming the offending op -- a second psum riding
+the update (the extra-collective mutation), the PR-2..4 pre-transpose dual
+(the operand-layout mutation), and an oversized tuning-table entry (the
+VMEM mutation).  Each check asserts internally and exits nonzero on failure.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+
+import dataclasses  # noqa: E402
+
+
+def _register_sharded(form):
+    """Register ``form`` (instance with a fresh .name) + a sharded solver
+    entry with the standard signature, mirroring distributed.py's wrappers."""
+    from repro.core.engine import (SolverPlan, register_formulation,
+                                   register_solver, s_step_solve_sharded)
+
+    def sharded(mesh, X, y, lam, b, s, iters, key, *, axis="shards",
+                fuse_packet=True, idx=None, unroll=1, impl=None, tiles=None):
+        plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles,
+                          fuse_packet=fuse_packet, unroll=unroll)
+        return s_step_solve_sharded(form, plan, mesh, X, y, lam, iters, key,
+                                    axis=axis, idx=idx)
+
+    register_formulation(form)
+    register_solver(form.name, "sharded", sharded)
+
+
+def check_sweep_pass():
+    """The full sweep passes on every registered solver lowering, and the
+    report carries the expected case matrix."""
+    from repro.analysis import run_sweep
+
+    report = run_sweep()
+    assert report.ok, "\n" + report.summary()
+    hlo = next(p for p in report.passes if p.name == "hlo")
+    # 3 formulations x (4 local + 8 sharded + 1 x64) cases
+    assert len(hlo.cases) == 39, hlo.cases
+    assert not hlo.skipped, hlo.skipped
+    plan = next(p for p in report.passes if p.name == "plan")
+    assert len(plan.cases) >= 11, plan.cases
+    print("sweep_pass OK")
+
+
+def check_mutation_second_psum():
+    """A formulation whose update sneaks a SECOND psum onto the wire must
+    fail the collective-count contract, naming the extra op."""
+    from repro.core.engine import PrimalRidge, _BoundPrimal
+
+    @dataclasses.dataclass(frozen=True)
+    class _SecondPsumBound(_BoundPrimal):
+        def update(self, carry, idx, dx, pp):
+            # The mutation: a per-update reduction (results used, so XLA
+            # cannot dead-code it away; /8 keeps the math ~fixed-point).
+            dx = jax.lax.psum(dx, "shards") / 8.0
+            return super().update(carry, idx, dx, pp)
+
+    class SecondPsumPrimal(PrimalRidge):
+        name = "evil-second-psum"
+
+        def bind_shard(self, Xl, yl, lam, *, d, n):
+            bound = super().bind_shard(Xl, yl, lam, d=d, n=n)
+            return _SecondPsumBound(**{f.name: getattr(bound, f.name)
+                                       for f in dataclasses.fields(bound)})
+
+    _register_sharded(SecondPsumPrimal())
+
+    from repro.analysis import run_hlo_pass
+    rep = run_hlo_pass(formulations=["evil-second-psum"])
+    assert not rep.ok, "sweep failed to catch the second psum"
+    counts = [v for v in rep.violations if v.check == "collective-count"]
+    assert counts, rep.violations
+    v = counts[0]
+    assert "evil-second-psum/sharded" in v.subject, v
+    assert "all-reduce" in v.message, v  # names the offending ops
+    print("found:", v)
+    print("mutation_second_psum OK")
+
+
+def check_mutation_pretranspose():
+    """The PR-2..4 pre-transpose dual registered as a formulation must fail
+    the operand-transpose contract, naming the transpose op."""
+    from _legacy_dual import LegacyPreTransposeDual
+
+    class MutantDual(LegacyPreTransposeDual):
+        name = "evil-pretranspose"
+
+    _register_sharded(MutantDual())
+
+    from repro.analysis import run_hlo_pass
+    rep = run_hlo_pass(formulations=["evil-pretranspose"])
+    assert not rep.ok, "sweep failed to catch the pre-transpose"
+    trs = [v for v in rep.violations if v.check == "operand-transpose"]
+    assert trs, rep.violations
+    v = trs[0]
+    assert "evil-pretranspose/sharded" in v.subject, v
+    assert "transpose" in v.message, v
+    print("found:", v)
+    print("mutation_pretranspose OK")
+
+
+def check_mutation_oversized_tile():
+    """An autotune-table entry whose tiles blow the VMEM budget must fail
+    the plan pass, naming the entry.  Runs in this throwaway process because
+    register_table mutates the live table."""
+    from repro.analysis import run_plan_pass
+    from repro.kernels.gram.tuning import register_table
+
+    assert run_plan_pass().ok  # clean before the mutation
+    # 2 panels + 2 lane slabs at (32, 4096, f32, cols) ~= 128 MiB >> 16 MiB
+    register_table({"4096,8192,float32,cols": (32, 4096)})
+    rep = run_plan_pass()
+    assert not rep.ok, "plan pass failed to catch the oversized tile"
+    vmem = [v for v in rep.violations if v.check == "vmem-budget"]
+    assert vmem, rep.violations
+    v = vmem[0]
+    assert "bm=32" in v.message and "bk=4096" in v.message, v
+    assert "4096,8192,float32,cols" in v.subject, v
+    print("found:", v)
+    print("mutation_oversized_tile OK")
+
+
+CHECKS = {f.__name__.replace("check_", ""): f for f in
+          (check_sweep_pass, check_mutation_second_psum,
+           check_mutation_pretranspose, check_mutation_oversized_tile)}
+
+if __name__ == "__main__":
+    CHECKS[sys.argv[1]]()

@@ -86,9 +86,14 @@ def check_collective_counts():
     construction on every XLA version.  The unfused schedule keeps the
     paper's two logical reductions as separate operands but packs them into
     one explicit variadic psum, so since PR 3 it is also exactly one
-    all-reduce per outer iteration on every XLA build (asserted below)."""
-    from repro.core import (ca_bcd_sharded, ca_bdcd_sharded,
-                            count_in_compiled, make_solver_mesh)
+    all-reduce per outer iteration on every XLA build (asserted below).
+
+    Counting rides ``repro.analysis.expect_collectives`` -- the contract
+    engine's assertion API over the one shared HLO parser -- which also pins
+    the KIND: exactly N all-reduces and zero of anything else on the wire."""
+    from repro.analysis import expect_collectives
+    from repro.core import ca_bcd_sharded, ca_bdcd_sharded, count_in_compiled, \
+        make_solver_mesh
     from repro.core.distributed import lower_solver
     mesh = make_solver_mesh(8)
     iters, s = 16, 8
@@ -96,11 +101,9 @@ def check_collective_counts():
                       fuse_packet=True, unroll=iters)
     ca = lower_solver(ca_bcd_sharded, mesh, 64, 256, 1e-3, 8, s, iters,
                       fuse_packet=True, unroll=iters // s)
-    n_cl = count_in_compiled(cl).count
-    n_ca = count_in_compiled(ca).count
-    assert n_cl == iters, n_cl          # one packet sync per iteration
-    assert n_ca == iters // s, n_ca     # one sync per outer iteration
-    assert n_cl / n_ca == s
+    expect_collectives(cl, iters, subject="bcd classical")  # 1 sync/iteration
+    expect_collectives(ca, iters // s, subject="ca-bcd")    # 1 sync/outer
+    # the factor-of-s latency claim is exactly these two counts
 
     # unfused baseline: Gram and residual stay separate operands but ride ONE
     # explicit variadic-psum packet (engine.psum_variadic), so the count no
@@ -109,29 +112,28 @@ def check_collective_counts():
     # iteration, same as the fused schedule.
     unf = lower_solver(ca_bcd_sharded, mesh, 64, 256, 1e-3, 8, 1, iters,
                        fuse_packet=False, unroll=iters)
-    n_unf = count_in_compiled(unf).count
-    assert n_unf == iters, n_unf
+    expect_collectives(unf, iters, subject="bcd classical unfused")
     unf_ca = lower_solver("primal", mesh, 64, 256, 1e-3, 8, s, iters,
                           fuse_packet=False, unroll=iters // s)
-    assert count_in_compiled(unf_ca).count == iters // s
+    expect_collectives(unf_ca, iters // s, subject="ca-bcd unfused")
 
     # dual layout too
     cl2 = lower_solver(ca_bdcd_sharded, mesh, 256, 64, 1e-3, 8, 1, iters,
                        fuse_packet=True, unroll=iters, col_sharded=False)
     ca2 = lower_solver(ca_bdcd_sharded, mesh, 256, 64, 1e-3, 8, s, iters,
                        fuse_packet=True, unroll=iters // s, col_sharded=False)
-    assert count_in_compiled(cl2).count / count_in_compiled(ca2).count == s
+    expect_collectives(cl2, iters, subject="bdcd classical")
+    expect_collectives(ca2, iters // s, subject="ca-bdcd")
 
     # proximal path: exactly 1 all-reduce per outer iteration with the
     # soft-threshold active (lam1 > 0) -- the nonsmooth term runs on the
     # replicated post-reduce packet and must add ZERO communication.
     prox = lower_solver("proximal", mesh, 64, 256, 1e-3, 8, s, iters,
                         fuse_packet=True, unroll=iters // s, lam1=1e-3)
-    n_prox = count_in_compiled(prox).count
-    assert n_prox == iters // s, n_prox
+    expect_collectives(prox, iters // s, subject="ca-proximal")
     prox_cl = lower_solver("proximal", mesh, 64, 256, 1e-3, 8, 1, iters,
                            fuse_packet=False, unroll=iters, lam1=1e-3)
-    assert count_in_compiled(prox_cl).count == iters
+    expect_collectives(prox_cl, iters, subject="proximal classical unfused")
 
     # bandwidth grows ~s per Table 1: CA op moves ~s^2 b^2 vs s * b^2 words
     b_cl = count_in_compiled(cl).operand_bytes
@@ -148,8 +150,8 @@ def check_collective_counts_pallas():
     is traced into the lowering, so the fused schedule's collective structure
     is the real one); on TPU the same assertion runs against the actual
     ``impl="pallas"`` Mosaic lowering."""
-    from repro.core import (ca_bcd_sharded, ca_bdcd_sharded,
-                            count_in_compiled, make_solver_mesh)
+    from repro.analysis import expect_collectives
+    from repro.core import ca_bcd_sharded, ca_bdcd_sharded, make_solver_mesh
     from repro.core.distributed import lower_solver
     mesh = make_solver_mesh(8)
     iters, s = 4, 2
@@ -161,13 +163,11 @@ def check_collective_counts_pallas():
     for impl in impls:
         ca = lower_solver(ca_bcd_sharded, mesh, 16, 256, 1e-3, 4, s, iters,
                           fuse_packet=True, unroll=iters // s, impl=impl)
-        n_ca = count_in_compiled(ca).count
-        assert n_ca == iters // s, (impl, n_ca)
+        expect_collectives(ca, iters // s, subject=f"ca-bcd[{impl}]")
         ca2 = lower_solver(ca_bdcd_sharded, mesh, 256, 64, 1e-3, 4, s, iters,
                            fuse_packet=True, unroll=iters // s,
                            col_sharded=False, impl=impl)
-        n_ca2 = count_in_compiled(ca2).count
-        assert n_ca2 == iters // s, (impl, n_ca2)
+        expect_collectives(ca2, iters // s, subject=f"ca-bdcd[{impl}]")
     print("collective_counts_pallas OK")
 
 

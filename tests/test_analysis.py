@@ -1,0 +1,139 @@
+"""Static contract engine (repro.analysis) tests.
+
+The sweep and the mutation checks need an 8-device world, so they run in
+subprocesses via tests/_analysis_checks.py (the pattern of
+test_distributed.py / dist_checks.py); the plan- and lint-pass units run
+in-process -- neither needs a device (lint needs no jax at all).
+
+The mutation cases are the engine's own acceptance criteria: a seeded second
+psum, a registered pre-transpose dual, and an oversized tuning-table entry
+must each FAIL the sweep with a message naming the offending op or plan.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = os.path.join(os.path.dirname(__file__), "_analysis_checks.py")
+_SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), os.pardir))
+
+
+def _run(check: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(_SRC) + os.pathsep + \
+        os.path.dirname(__file__) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, _SCRIPT, check], env=env,
+                          capture_output=True, text=True, timeout=1200,
+                          cwd=_ROOT)
+    assert proc.returncode == 0, (
+        f"{check} failed:\nSTDOUT:\n{proc.stdout[-3000:]}\n"
+        f"STDERR:\n{proc.stderr[-3000:]}")
+    assert f"{check} OK" in proc.stdout
+
+
+@pytest.mark.slow
+def test_sweep_passes_on_all_registered_solvers():
+    """The acceptance gate: every (formulation, backend, impl, fuse_packet,
+    ragged) lowering in the registry satisfies its declared contracts."""
+    _run("sweep_pass")
+
+
+def test_mutation_second_psum_caught():
+    _run("mutation_second_psum")
+
+
+def test_mutation_pretranspose_caught():
+    _run("mutation_pretranspose")
+
+
+def test_mutation_oversized_tile_caught():
+    _run("mutation_oversized_tile")
+
+
+# ---------------------------------------------------------------------------
+# plan pass: in-process units (no devices involved)
+# ---------------------------------------------------------------------------
+
+def test_plan_pass_clean_on_shipped_table():
+    from repro.analysis import run_plan_pass
+    rep = run_plan_pass()
+    assert rep.ok, rep.violations
+    assert len(rep.cases) >= 11  # 9 table entries + 2 layout defaults
+
+
+def test_check_tiles_flags_vmem_and_alignment():
+    from repro.analysis import check_tiles
+    # lane-slab amplification: 2*(32*4096*128)*4B ~= 128 MiB >> 16 MiB
+    vs = check_tiles(32, 4096, "float32", "cols", "t")
+    assert any(v.check == "vmem-budget" for v in vs), vs
+    assert any("MiB" in v.message for v in vs)
+    # misalignment: bm off the 8-row sublane granule, bk off the lane granule
+    vs = check_tiles(12, 120, "float32", "rows", "t")
+    kinds = {v.check for v in vs}
+    assert kinds == {"tile-alignment"}, vs
+    # in-budget aligned tiles are clean in both layouts
+    assert not check_tiles(128, 512, "float32", "rows", "t")
+    assert not check_tiles(8, 256, "float32", "cols", "t")
+
+
+def test_check_plan_validates_impl_and_tiles():
+    from repro.analysis import check_plan
+    from repro.kernels.gram import PacketPlan
+    assert not check_plan(PacketPlan(impl="ref", bm=128, bk=512))
+    vs = check_plan(PacketPlan(bm=8, bk=4096), layout="cols")
+    assert any(v.check == "vmem-budget" for v in vs), vs
+
+
+# ---------------------------------------------------------------------------
+# lint pass: in-process units (no jax needed)
+# ---------------------------------------------------------------------------
+
+def test_lint_clean_on_repo_trees():
+    from repro.analysis import run_lint
+    rep = run_lint(repo_root=_ROOT)
+    assert rep.ok, "\n".join(str(v) for v in rep.violations)
+    assert len(rep.cases) > 50  # actually swept the trees
+
+
+def test_lint_catches_pretranspose_formulation():
+    """tests/_legacy_dual.py IS the seeded violation: a formulation-shaped
+    class binding ``X.T`` with no waiver."""
+    from repro.analysis import lint_file
+    vs = lint_file(os.path.join(os.path.dirname(__file__), "_legacy_dual.py"))
+    assert sum(v.check == "operand-transpose" for v in vs) == 2, vs
+
+
+def test_lint_catches_raw_collective_and_env_order(tmp_path):
+    from repro.analysis import lint_file
+    bad = tmp_path / "bad_module.py"
+    bad.write_text(
+        "import os\n"
+        "import jax\n"
+        'os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"\n'
+        "def f(x):\n"
+        "    return jax.lax.psum(x, 'shards')\n")
+    vs = lint_file(str(bad))
+    checks = {v.check for v in vs}
+    assert checks == {"raw-collective", "env-before-jax"}, vs
+    # waivers silence both
+    ok = tmp_path / "ok_module.py"
+    ok.write_text(
+        "import os\n"
+        'os.environ["XLA_FLAGS"] = "x"\n'
+        "import jax\n"
+        "def f(x):\n"
+        "    return jax.lax.psum(x, 's')  # contract: allow-collective\n")
+    assert not lint_file(str(ok))
+
+
+def test_contracts_hook_declared_by_every_formulation():
+    """New formulations must DECLARE their invariants: every registry entry
+    exposes contracts() returning a SolverContracts."""
+    import repro.core  # noqa: F401  -- registers the built-ins
+    from repro.core.engine import FORMULATIONS, SolverContracts
+    for name, form in FORMULATIONS.items():
+        c = form.contracts()
+        assert isinstance(c, SolverContracts), (name, c)
+        assert c.sync_per_outer == 1, name  # the paper's headline contract

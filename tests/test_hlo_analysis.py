@@ -1,10 +1,27 @@
-"""HLO collective-parser unit tests against synthetic and real HLO text."""
+"""HLO parser unit tests against synthetic and real HLO text.
+
+The ``tests/fixtures/hlo/*.txt`` files are line sets captured from REAL
+JAX 0.4.37 CPU-backend lowerings of the solvers (provenance in each file's
+header), so the conventions the parser encodes -- brace-form replica_groups,
+``-start`` tuple halving, gather-absorbing fusion names -- are pinned
+without a live multi-device compile in this test process.
+"""
+import os
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.core.hlo_analysis import collective_summary, parse_collectives
+from repro.core.hlo_analysis import (collective_dtypes, collective_summary,
+                                     parse_collectives, parse_named_ops)
+
+_FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures", "hlo")
+
+
+def _fixture(name: str) -> str:
+    with open(os.path.join(_FIXTURES, name), encoding="utf-8") as f:
+        return f.read()
 
 SYNTH = """
 HloModule test
@@ -53,6 +70,61 @@ def test_summary_aggregation():
     assert s.operand_bytes > 0 and s.link_bytes > 0
     assert set(s.by_kind) == {"all-gather", "all-reduce", "all-to-all",
                               "collective-permute", "reduce-scatter"}
+
+
+def test_start_tuple_result_halved():
+    """Async ``-start`` results are (operand(s), result(s)) tuples: counted
+    once, at half the summed tuple bytes; the paired ``-done`` is skipped."""
+    synth = (
+        "%ars = (f32[8,9]{1,0}, f32[8,9]{1,0}) all-reduce-start(%p), "
+        "channel_id=1, replica_groups={{0,1,2,3,4,5,6,7}}\n"
+        "%ard = f32[8,9]{1,0} all-reduce-done(%ars)\n")
+    ops = parse_collectives(synth)
+    assert len(ops) == 1
+    assert ops[0].result_bytes == 8 * 9 * 4  # tuple sum halved
+    assert ops[0].group_size == 8
+
+
+# ---------------------------------------------------------------------------
+# captured-HLO fixtures (real JAX 0.4.37 output; see file headers)
+# ---------------------------------------------------------------------------
+
+def test_fixture_sharded_collectives():
+    """The real sharded CA-BCD lowering at iters=4, s=2: exactly H=2
+    all-reduces of the fused (sb, sb+1) packet, brace-form replica groups
+    over all 8 devices, nothing else on the wire."""
+    txt = _fixture("ca_bcd_sharded_jax0437.txt")
+    ops = parse_collectives(txt)
+    assert [op.kind for op in ops] == ["all-reduce", "all-reduce"]
+    for op in ops:
+        assert op.group_size == 8, op
+        assert op.result_bytes == 8 * 9 * 4, op  # f32[8,9] fused packet
+    assert collective_dtypes(txt) == {"f32"}
+    # consumer lines that merely REFERENCE %all-reduce.N are not ops
+    assert sum("all-reduce" in ln for ln in txt.splitlines()) > 2
+
+
+def test_fixture_named_ops_ref_panel():
+    """The local ref lowering materializes the (sb=8, n=256) sampled panel:
+    a gather op plus the fusion XLA names after the gather it absorbed --
+    the shapes the contract engine's panel check keys on."""
+    txt = _fixture("ca_bcd_local_ref_jax0437.txt")
+    assert not parse_collectives(txt)  # local backend: nothing on the wire
+    gathers = parse_named_ops(txt, opcodes=("gather",))
+    assert len(gathers) == 1 and gathers[0].shapes() == ((8, 256),)
+    fusions = [op for op in parse_named_ops(txt, opcodes=("fusion",))
+               if "gather" in op.result_name]
+    assert fusions and fusions[0].shapes() == ((8, 256),)
+    assert gathers[0].dtypes() == ("f32",)
+
+
+def test_fixture_legacy_dual_transpose():
+    """The legacy pre-transpose dual's lowering: the operand-shaped
+    transpose ((16, 256) shard -> (256, 16)) the PR-5 contract forbids."""
+    txt = _fixture("legacy_dual_pretranspose_jax0437.txt")
+    trs = parse_named_ops(txt, opcodes=("transpose",))
+    assert len(trs) == 2
+    assert all(op.shapes() == ((256, 16),) for op in trs)
 
 
 def test_real_hlo_psum():
