@@ -1,4 +1,4 @@
-.PHONY: test test-all test-fast bench bench-smoke check-contracts
+.PHONY: test test-all test-fast bench bench-smoke check-contracts check-faults
 
 # Tier-1 verify (ROADMAP.md): the full suite, fail-fast.
 test:
@@ -28,3 +28,10 @@ bench-smoke:
 # `contracts` job.
 check-contracts:
 	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m repro.analysis sweep -o ANALYSIS.json
+
+# Fault-injection + recovery suite (DESIGN.md section 7): the detection
+# matrix, the clean-solve bitwise no-op, the checkpoint writer-error paths,
+# and the f64 elastic-resume acceptance (8-device subprocess).  Mirrors the
+# CI `faults` job.
+check-faults:
+	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m pytest -x -q -m "not slow" tests/test_faults.py tests/test_checkpoint.py

@@ -1,0 +1,83 @@
+"""Guard-overhead benchmark: what resilience costs when nothing breaks.
+
+Times the SAME s-step solve (ref backend, jitted end to end) with the
+in-scan health guard off and on.  The guard adds a handful of reductions
+over data already resident (isfinite counts, a squared norm, a max) plus a
+never-taken ``lax.cond`` rescue branch per outer step -- target overhead is
+< 3% of the unguarded ref-backend solve, recorded as the
+``solver/guard_overhead`` row in BENCH_smoke.json so a regression (e.g. the
+guard accidentally forcing an extra packet materialization) shows up as a
+baseline diff.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bcd import ca_bcd
+from repro.core.engine import sample_blocks
+
+from ._util import row, timed
+
+# (d, n, b, s, iters): big enough that the Gram work dominates timer noise,
+# small enough for CI.  Unlike the kernel benches, smoke does NOT shrink
+# this shape: below a several-ms solve the per-call scheduling jitter on
+# shared CI hardware swamps the few-percent effect and the recorded
+# overhead row becomes meaningless.  The full shape times in under ~10s.
+SHAPE = (256, 1 << 14, 8, 4, 20)
+SHAPE_SMOKE = SHAPE
+
+
+def _paired_us(d, n, b, s, iters, impl, rounds: int = 15):
+    """Wall microseconds for the unguarded and guarded solves, measured
+    INTERLEAVED (off, on, off, on, ...) and summarized as (min unguarded,
+    min unguarded x median per-round on/off ratio).  Pairing each round and
+    taking the median ratio cancels CPU frequency / scheduling drift that
+    sequential timing cannot -- on a noisy box the raw walls swing +-20%,
+    dwarfing the few-percent effect under measurement, but the within-round
+    ratio stays put."""
+    import statistics
+    import time
+    X = jax.random.normal(jax.random.key(0), (d, n), jnp.float32)
+    y = jax.random.normal(jax.random.key(1), (n,), jnp.float32)
+    idx = sample_blocks(jax.random.key(2), d, b, iters)
+
+    def make(guard):
+        @jax.jit
+        def solve(X, y, idx):
+            res = ca_bcd(X, y, 1e-3, b, s, iters, None, idx=idx, guard=guard,
+                         impl=impl)
+            return res.w, res.alpha
+        return solve
+
+    fns = {False: make(False), True: make(True)}
+    for g in fns:
+        jax.block_until_ready(fns[g](X, y, idx))    # compile outside timing
+    ratios, best_off = [], float("inf")
+    for _ in range(rounds):
+        wall = {}
+        for g in (False, True):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fns[g](X, y, idx))
+            wall[g] = (time.perf_counter() - t0) * 1e6
+        ratios.append(wall[True] / wall[False])
+        best_off = min(best_off, wall[False])
+    return best_off, best_off * statistics.median(ratios)
+
+
+def run(impl: str | None = None, smoke: bool = False) -> list[str]:
+    impl = impl or "ref"
+    d, n, b, s, iters = SHAPE_SMOKE if smoke else SHAPE
+    us_off, us_on = _paired_us(d, n, b, s, iters, impl)
+    overhead = us_on / us_off - 1.0
+    return [
+        row("solver/guard_off", us_off,
+            f"impl={impl} d={d} n={n} b={b} s={s} iters={iters}"),
+        row("solver/guard_overhead", us_on,
+            f"impl={impl} overhead={overhead * 100:.2f}% target=<3%"),
+    ]
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -24,6 +24,12 @@ formulation DECLARES via its ``contracts()`` hook
   that only the ref impl builds ``Y = X[idx]``.
 * f64-packet: under the x64 config every collective carries f64 (one extra
   sharded lowering per formulation, at dtype=float64).
+* health-in-packet: for formulations declaring ``health_in_packet``, the
+  guard-armed lowering (``guard=True``) obeys the SAME collective budget --
+  exactly ``sync_per_outer * H`` sharded, zero local -- proving the health
+  word rides the packet psum instead of adding a reduction (the PR-7
+  zero-extra-collectives guarantee; 2 extra local + 4 extra sharded ref
+  cases per formulation).
 
 Sweep shapes are chosen so the shapes the checks key on are PAIRWISE
 DISTINCT (sb=8, d/P=16, n/P=32, d=16P, n=32P): a square sb x sb transpose
@@ -164,6 +170,17 @@ def run_hlo_pass(formulations=None) -> PassReport:
                         _check_panel_free(txt, sb, n if form.operand_layout
                                           == "rows" else d, case,
                                           rep.violations)
+            if contract.health_in_packet:
+                # Guard-armed local lowerings stay collective-free (ref impl
+                # only: the guard is impl-independent post-kernel logic).
+                for iters in (ITERS_EVEN, ITERS_RAGGED):
+                    case = rep.case(
+                        f"{name}/local[impl=ref,iters={iters},guard]")
+                    compiled = lower_solver_local(
+                        name, d, n, lam, B, S, iters, impl="ref", guard=True,
+                        **kw)
+                    _check_collectives(compiled.as_text(), contract, 0, case,
+                                       rep.violations)
 
         # ---- sharded backend: H collectives, no operand transpose ---------
         if "sharded" in backends.get(name, ()):
@@ -191,6 +208,26 @@ def run_hlo_pass(formulations=None) -> PassReport:
                         if impl in contract.panel_free_impls:
                             _check_panel_free(txt, sb, contraction, case,
                                               rep.violations)
+
+            # ---- guard armed: the health word MUST ride the packet psum ----
+            if contract.health_in_packet:
+                for fuse in (True, False):
+                    for iters in (ITERS_EVEN, ITERS_RAGGED):
+                        case = rep.case(
+                            f"{name}/sharded[impl=ref,fuse={fuse},"
+                            f"iters={iters},guard]")
+                        compiled = lower_solver(
+                            name, mesh, d, n, lam, B, S, iters,
+                            fuse_packet=fuse, impl="ref",
+                            unroll=max(iters // S, 1), guard=True, **kw)
+                        txt = compiled.as_text()
+                        H = _outer_count(iters, S)
+                        _check_collectives(txt, contract,
+                                           contract.sync_per_outer * H,
+                                           case, rep.violations)
+                        if contract.operand_transpose_free:
+                            _check_no_transpose(txt, op_shape, case,
+                                                rep.violations)
 
             # ---- one x64 lowering: the packet must reduce in f64 ----------
             if contract.f64_packet:

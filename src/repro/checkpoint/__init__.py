@@ -1,3 +1,3 @@
-from .checkpointer import CheckpointManager
+from .checkpointer import CheckpointManager, CheckpointWriteError
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "CheckpointWriteError"]

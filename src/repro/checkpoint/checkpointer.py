@@ -17,6 +17,11 @@ Guarantees (all tested in tests/test_checkpoint.py):
   * **Async** -- saves run on a writer thread off the training critical path
     (state is device_get'd synchronously -- cheap relative to a step -- and
     serialized in the background).  keep=N pruning runs after each commit.
+  * **No silent writer death** -- an exception on the background writer is
+    captured and re-raised as :class:`CheckpointWriteError` on the next
+    ``save()`` / ``wait()`` / ``close()``, so a failed async snapshot (disk
+    full, permissions) can never silently break the restore chain the
+    supervisor leans on.
 """
 from __future__ import annotations
 
@@ -36,31 +41,67 @@ def _flatten(state):
     return leaves, paths, treedef
 
 
+class CheckpointWriteError(RuntimeError):
+    """A checkpoint write failed.  For async saves this surfaces on the NEXT
+    ``save()`` / ``wait()`` / ``close()`` call -- the background thread's
+    original exception is chained as ``__cause__``."""
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
         self.dir = directory
         self.keep = keep
         self.async_save = async_save
         self._writer: threading.Thread | None = None
+        self._writer_step: int | None = None
+        self._pending_error: BaseException | None = None
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------- save --
     def save(self, step: int, state, extra: dict | None = None,
              block: bool = False) -> None:
-        self.wait()  # one in-flight save at a time
+        self.wait()  # one in-flight save at a time; raises a captured failure
         host_state = jax.tree.map(np.asarray, jax.device_get(state))
         if self.async_save and not block:
+            self._writer_step = step
             self._writer = threading.Thread(
-                target=self._write, args=(step, host_state, extra or {}),
+                target=self._write_guarded, args=(step, host_state, extra or {}),
                 daemon=True)
             self._writer.start()
         else:
-            self._write(step, host_state, extra or {})
+            try:
+                self._write(step, host_state, extra or {})
+            except Exception as e:
+                raise CheckpointWriteError(
+                    f"checkpoint write for step {step} failed") from e
+
+    def _write_guarded(self, step: int, host_state, extra: dict) -> None:
+        # Runs on the writer thread: an uncaught exception here would die with
+        # the thread, leaving callers believing the snapshot landed.  Capture
+        # it; wait() re-raises on the caller's thread.
+        try:
+            self._write(step, host_state, extra)
+        except BaseException as e:
+            self._pending_error = e
+
+    def _raise_pending(self) -> None:
+        if self._pending_error is not None:
+            e, self._pending_error = self._pending_error, None
+            step = self._writer_step
+            raise CheckpointWriteError(
+                f"async checkpoint write for step {step} failed") from e
 
     def wait(self) -> None:
         if self._writer is not None:
             self._writer.join()
             self._writer = None
+        self._raise_pending()
+
+    def close(self) -> None:
+        """Drain the writer and surface any captured failure.  Call at end of
+        job (or use ``wait()``) -- otherwise a failed final snapshot is only
+        detected by the next save."""
+        self.wait()
 
     def _write(self, step: int, host_state, extra: dict) -> None:
         leaves, paths, _ = _flatten(host_state)

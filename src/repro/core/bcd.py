@@ -66,7 +66,8 @@ def ca_bcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int, iters: int,
            key: jax.Array, *, w0: jax.Array | None = None,
            idx: jax.Array | None = None, w_ref: jax.Array | None = None,
            track_cond: bool = False, impl: str | None = None,
-           tiles: tuple[int, int] | None = None) -> SolveResult:
+           tiles: tuple[int, int] | None = None, guard: bool = False,
+           fault=None, step0: int = 0) -> SolveResult:
     """CA-BCD, Algorithm 2: the s-step engine at s>1.  ``iters`` counts
     *inner* iterations; a non-multiple of ``s`` runs a ragged final outer
     iteration.  Consumes the same index stream as :func:`bcd` (same ``key``
@@ -77,10 +78,16 @@ def ca_bcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int, iters: int,
     ``impl``-selected backend with the lam-regularized diagonal fused in),
     then ``s`` local solves via block forward substitution, then deferred
     vector updates (Eqs. 9-10) from the same (X, flat) pair.
+
+    ``guard`` arms the per-outer-step health word and degradation ladder
+    (DESIGN.md section 7); ``fault`` threads a test-only
+    :class:`repro.faults.FaultPlan`; ``step0`` offsets the outer-step
+    numbering for segmented (checkpoint-resumed) solves.
     """
-    plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles, track_cond=track_cond)
+    plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles, track_cond=track_cond,
+                      guard=guard, fault=fault)
     return s_step_solve(PRIMAL, plan, X, y, lam, iters, key, x0=w0, idx=idx,
-                        w_ref=w_ref)
+                        w_ref=w_ref, step0=step0)
 
 
 # ca_bcd at s=1 is classical bcd, so it is the canonical registry entry.

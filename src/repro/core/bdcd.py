@@ -63,14 +63,18 @@ def ca_bdcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int, iters: int,
             key: jax.Array, *, alpha0: jax.Array | None = None,
             idx: jax.Array | None = None, w_ref: jax.Array | None = None,
             track_cond: bool = False, impl: str | None = None,
-            tiles: tuple[int, int] | None = None) -> SolveResult:
+            tiles: tuple[int, int] | None = None, guard: bool = False,
+            fault=None, step0: int = 0) -> SolveResult:
     """CA-BDCD, Algorithm 4: the s-step engine at s>1.  Same index stream as
     :func:`bdcd` => identical iterates in exact arithmetic; one sb' x sb'
     Gram-packet all-reduce per outer iteration in the distributed version
-    (backend per ``impl``).  ``iters`` need not be a multiple of ``s``."""
-    plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles, track_cond=track_cond)
+    (backend per ``impl``).  ``iters`` need not be a multiple of ``s``.
+    ``guard``/``fault``/``step0`` arm the health guard, the test-only fault
+    hook, and the segmented-solve step offset (DESIGN.md section 7)."""
+    plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles, track_cond=track_cond,
+                      guard=guard, fault=fault)
     return s_step_solve(DUAL, plan, X, y, lam, iters, key, x0=alpha0, idx=idx,
-                        w_ref=w_ref)
+                        w_ref=w_ref, step0=step0)
 
 
 # ca_bdcd at s=1 is classical bdcd, so it is the canonical registry entry.

@@ -90,6 +90,37 @@ def bdcd_costs(d: int, n: int, P: int, b: int, H: int, s: int = 1) -> Costs:
     return Costs(F, L, W, M)
 
 
+def snapshot_cadence(machine: MachineModel, *, d: int, n: int, P: int, b: int,
+                     s: int, mtbf_outer: float, formulation: str = "primal",
+                     ) -> dict:
+    """Young's rule for the supervisor's snapshot interval, in OUTER steps.
+
+    The solver carry snapshot is the logical iterate pair (w in R^d, alpha in
+    R^n) -- ``d + n`` words gathered and written once, modeled as one message
+    (``t_snap = alpha + beta (d + n)``).  One outer step costs the
+    formulation's Theorem 6/7 critical path at H = s (``t_step``).  With
+    failures arriving every ``mtbf_outer`` outer steps on average, the
+    classical first-order optimum balances snapshot overhead ``t_snap / k``
+    against expected replay ``k t_step / (2 mtbf)``:
+
+        k* = sqrt(2 * mtbf_outer * t_snap / t_step)
+
+    Returns ``{"cadence", "t_snap", "t_step", "overhead"}`` -- cadence is
+    k* clamped to >= 1, overhead the per-step fraction
+    ``t_snap / (k* t_step) + k* t_step / (2 mtbf t_step)`` the supervisor
+    pays for resilience (DESIGN.md section 7 carries the worked example).
+    """
+    if mtbf_outer <= 0:
+        raise ValueError(f"mtbf_outer={mtbf_outer} must be > 0")
+    t_snap = machine.alpha + machine.beta * (d + n)
+    cost_fn = bdcd_costs if formulation == "dual" else bcd_costs
+    t_step = cost_fn(d, n, P, b, s, s).time(machine)
+    k = max(1, round(math.sqrt(2 * mtbf_outer * t_snap / t_step)))
+    overhead = t_snap / (k * t_step) + k / (2 * mtbf_outer)
+    return {"cadence": k, "t_snap": t_snap, "t_step": t_step,
+            "overhead": overhead}
+
+
 def cg_costs(d: int, n: int, P: int, k: int) -> Costs:
     """Krylov row of Table 2: 1D layout, small-dimension vectors replicated."""
     F = k * (4 * d * n / P + 5 * min(d, n))

@@ -65,16 +65,22 @@ def ca_bcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
                    axis: str = "shards", fuse_packet: bool = True,
                    idx: jax.Array | None = None, unroll: int = 1,
                    impl: str | None = None,
-                   tiles: tuple[int, int] | None = None):
+                   tiles: tuple[int, int] | None = None, guard: bool = False,
+                   fault=None, x0: jax.Array | None = None, step0: int = 0):
     """CA-BCD with X (d, n) sharded over columns.  s=1 gives the classical
     schedule (one Gram reduction per iteration).  Returns (w replicated,
-    alpha sharded over n).  ``impl`` selects the Gram-packet backend for the
+    alpha sharded over n) -- plus the replicated guard metrics dict when
+    ``guard`` is set.  ``impl`` selects the Gram-packet backend for the
     local (G, r) contributions (see ``repro.kernels.gram``); ``tiles`` pins
-    the kernel's (bm, bk) instead of the autotuned pick."""
+    the kernel's (bm, bk) instead of the autotuned pick.  ``guard`` fuses
+    the health word into the packet all-reduce (still ONE collective per
+    outer iteration); ``fault`` is the test-only injection hook; ``x0`` /
+    ``step0`` warm-start a segmented (checkpoint-resumed) solve."""
     plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles,
-                      fuse_packet=fuse_packet, unroll=unroll)
+                      fuse_packet=fuse_packet, unroll=unroll, guard=guard,
+                      fault=fault)
     return s_step_solve_sharded("primal", plan, mesh, X, y, lam, iters, key,
-                                axis=axis, idx=idx)
+                                axis=axis, idx=idx, x0=x0, step0=step0)
 
 
 def bcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
@@ -99,13 +105,18 @@ def ca_bdcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
                     axis: str = "shards", fuse_packet: bool = True,
                     idx: jax.Array | None = None, unroll: int = 1,
                     impl: str | None = None,
-                    tiles: tuple[int, int] | None = None):
+                    tiles: tuple[int, int] | None = None, guard: bool = False,
+                    fault=None, x0: jax.Array | None = None, step0: int = 0):
     """CA-BDCD with X (d, n) sharded over rows.  Returns (w sharded over d,
-    alpha replicated).  ``impl`` selects the Gram-packet backend."""
+    alpha replicated) -- plus the replicated guard metrics dict when
+    ``guard`` is set.  ``impl`` selects the Gram-packet backend; ``guard`` /
+    ``fault`` / ``x0`` / ``step0`` as in :func:`ca_bcd_sharded` (``x0`` is
+    the replicated alpha iterate here)."""
     plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles,
-                      fuse_packet=fuse_packet, unroll=unroll)
+                      fuse_packet=fuse_packet, unroll=unroll, guard=guard,
+                      fault=fault)
     return s_step_solve_sharded("dual", plan, mesh, X, y, lam, iters, key,
-                                axis=axis, idx=idx)
+                                axis=axis, idx=idx, x0=x0, step0=step0)
 
 
 def bdcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,

@@ -61,13 +61,14 @@ from repro.kernels.gram import (ColMajorOperand, PacketOperand, PacketPlan,
 from repro.kernels.gram.ops import _check_positive_int, _pad_axis
 
 from .sampling import overlap_matrix, sample_blocks
-from .subproblem import block_forward_substitution
+from .subproblem import block_forward_substitution, choose_jitter
 
 
 class SolveResult(NamedTuple):
     w: jax.Array          # (d,) primal iterate
     alpha: jax.Array      # (n,) auxiliary iterate (X^T w primal; dual vector)
     history: dict         # metric name -> (iters,) array (per inner iteration)
+    metrics: dict = {}    # end-of-solve scalars (guard/recovery telemetry)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +105,11 @@ class SolverContracts:
       it is not listed).
     * ``f64_packet``: under the x64 test path every collective must move f64
       words (the packet may not silently downcast accumulation).
+    * ``health_in_packet``: the formulation supports ``SolverPlan.guard``
+      with the per-outer-step health word riding the ONE packet all-reduce
+      (DESIGN.md section 7) -- the analysis engine additionally lowers the
+      guard-enabled solver and asserts the collective count is UNCHANGED
+      (exactly ``sync_per_outer * H``): the zero-extra-collectives guarantee.
     * ``lowering_kwargs``: extra solver kwargs ((key, value) pairs) the
       analysis engine passes when lowering this formulation abstractly, so
       formulation-specific code paths (e.g. the proximal soft-threshold at
@@ -115,6 +121,7 @@ class SolverContracts:
     operand_transpose_free: bool = True
     panel_free_impls: tuple = ("pallas", "pallas_interpret")
     f64_packet: bool = True
+    health_in_packet: bool = False
     lowering_kwargs: tuple = ()
 
 
@@ -129,6 +136,17 @@ class SolverPlan:
     ``fuse_packet`` picks the wire layout of the distributed reduction (see
     :func:`_packet_reduce`); ``unroll`` is forwarded to the outer scan;
     ``track_cond`` records cond(Gram) per outer iteration in the history.
+
+    ``guard`` enables the in-scan health guards (DESIGN.md section 7): a
+    per-outer-step health word rides the ONE packet reduction (zero extra
+    collectives) and a tripped guard degrades the step -- adaptive diagonal
+    jitter or a skipped update -- instead of corrupting ``s`` deferred
+    iterations.  ``guard_boost`` is the divergence/magnitude envelope margin
+    (trip when the tracked quantity exceeds ``boost x`` its running floor);
+    ``guard_cond_max`` caps the Gram-diagonal ratio condition proxy (``None``
+    picks ``0.1 / eps(dtype)``).  ``fault`` attaches a test-only
+    :class:`repro.faults.FaultPlan` (duck-typed: anything with
+    ``apply_packet`` / ``apply_health``) injected inside the hot loop.
     """
     b: int
     s: int = 1
@@ -137,6 +155,10 @@ class SolverPlan:
     fuse_packet: bool = True
     unroll: int = 1
     track_cond: bool = False
+    guard: bool = False
+    guard_boost: float = 1e4
+    guard_cond_max: float | None = None
+    fault: object | None = None
 
     def __post_init__(self):
         # Fail fast at plan construction: a typo'd impl or a zero tile would
@@ -147,6 +169,21 @@ class SolverPlan:
         if self.tiles is not None and len(self.tiles) != 2:
             raise ValueError(
                 f"SolverPlan.tiles={self.tiles!r} must be a (bm, bk) pair")
+        if not isinstance(self.guard, bool):
+            raise ValueError(f"SolverPlan.guard={self.guard!r} must be a bool")
+        if not self.guard_boost > 1:
+            raise ValueError(
+                f"SolverPlan.guard_boost={self.guard_boost!r} must be > 1")
+        if self.guard_cond_max is not None and not self.guard_cond_max > 1:
+            raise ValueError(
+                f"SolverPlan.guard_cond_max={self.guard_cond_max!r} "
+                "must be > 1 (or None for the dtype default)")
+        if self.fault is not None and not (
+                hasattr(self.fault, "apply_packet")
+                and hasattr(self.fault, "apply_health")):
+            raise ValueError(
+                f"SolverPlan.fault={self.fault!r} must provide "
+                "apply_packet/apply_health (see repro.faults.FaultPlan)")
         self.packet  # PacketPlan.make validates impl and the tile values
 
     @property
@@ -210,7 +247,8 @@ class Formulation(Protocol):
     def sample_dim(self, d: int, n: int) -> int: ...
     def bind(self, X, y, lam, *, x0=None, w_ref=None) -> BoundFormulation: ...
     def pad_shards(self, X, y, n_shards: int) -> tuple: ...
-    def bind_shard(self, Xl, yl, lam, *, d: int, n: int) -> BoundFormulation: ...
+    def bind_shard(self, Xl, yl, lam, *, d: int, n: int,
+                   x0=None) -> BoundFormulation: ...
     def dist_in_specs(self, axis) -> tuple: ...
     def dist_out_specs(self, axis) -> tuple: ...
     def dist_finalize(self, w, alpha, d: int, n: int) -> tuple: ...
@@ -272,7 +310,12 @@ class _BoundPrimal:
         w = jnp.zeros((self.d,), X.dtype) if self.w0 is None else self.w0
         if axes is not None:
             # alpha is device-varying (each shard owns a slice of R^n); w is
-            # replicated.  Warm starts are a single-device affordance.
+            # replicated.  A warm-started w derives its local alpha slice as
+            # ``w @ Xl`` -- no transpose, no gather -- which is what lets the
+            # supervised restart path re-enter the sharded solve from a
+            # checkpointed iterate (DESIGN.md section 7).
+            if self.w0 is not None:
+                return w, w @ X
             return w, compat.pvary(jnp.zeros(self.y.shape, X.dtype), axes)
         # contract: allow-transpose -- one-time warm-start init, not the
         # solve path (the hot loop's transpose-free-ness is what the HLO
@@ -311,8 +354,9 @@ class PrimalRidge:
     def contracts(self):
         # Theorem 1/6 structure: ONE fused packet all-reduce per outer
         # iteration, nothing else on the wire; row-major operand, no
-        # transpose, panel-free kernel path.
-        return SolverContracts()
+        # transpose, panel-free kernel path.  The health word rides that
+        # same all-reduce (guard mode adds zero collectives).
+        return SolverContracts(health_in_packet=True)
 
     def sample_dim(self, d, n):
         return d
@@ -325,9 +369,9 @@ class PrimalRidge:
     def pad_shards(self, X, y, n_shards):
         return _pad_to(X, n_shards, 1), _pad_to(y, n_shards, 0)
 
-    def bind_shard(self, Xl, yl, lam, *, d, n):
+    def bind_shard(self, Xl, yl, lam, *, d, n, x0=None):
         return _BoundPrimal(operand=RowMajorOperand(Xl), y=yl, lam=lam, n=n,
-                            d=d)
+                            d=d, w0=x0)
 
     def dist_in_specs(self, axis):
         return P(None, axis), P(axis), P(None)
@@ -384,6 +428,12 @@ class _BoundDual:
         if axes is not None:
             # w is device-varying (each shard owns a slice of R^d); alpha is
             # replicated.  The operand's contraction length IS the local dl.
+            # A warm-started alpha derives its local w slice straight from
+            # the ORIGINAL (dl, n) layout -- checkpointed restarts re-enter
+            # the sharded solve transpose-free (DESIGN.md section 7).
+            if self.alpha0 is not None:
+                Xl = self.operand.array
+                return -(Xl @ self.alpha0) / (self.lam * self.n), self.alpha0
             wl = compat.pvary(jnp.zeros((self.operand.contraction,), dtype),
                               axes)
             return wl, jnp.zeros((self.n,), dtype)
@@ -434,8 +484,9 @@ class DualRidge:
     def contracts(self):
         # Theorem 2/7 structure, plus the PR-5 guarantee this formulation
         # exists to keep: the ORIGINAL (d, n) layout is never transposed
-        # anywhere in the sharded solve body.
-        return SolverContracts()
+        # anywhere in the sharded solve body.  Guard mode keeps both: the
+        # health word rides the one packet all-reduce.
+        return SolverContracts(health_in_packet=True)
 
     def sample_dim(self, d, n):
         return n
@@ -447,11 +498,12 @@ class DualRidge:
     def pad_shards(self, X, y, n_shards):
         return _pad_to(X, n_shards, 0), y
 
-    def bind_shard(self, Xl, yl, lam, *, d, n):
+    def bind_shard(self, Xl, yl, lam, *, d, n, x0=None):
         # The ORIGINAL (dl, n) shard, zero copies: the column-major operand
         # gathers sampled columns in place (pre-PR-5 this was ``Xl.T``,
         # doubling the resident dataset for the length of the solve).
-        return _BoundDual(operand=ColMajorOperand(Xl), y=yl, lam=lam, n=n)
+        return _BoundDual(operand=ColMajorOperand(Xl), y=yl, lam=lam, n=n,
+                          alpha0=x0)
 
     def dist_in_specs(self, axis):
         return P(axis, None), P(None), P(None)
@@ -503,21 +555,31 @@ def psum_variadic(leaves, axis):
     return out
 
 
-def _packet_reduce(G_local, r_local, axis, fuse):
+def _packet_reduce(G_local, r_local, axis, fuse, health=None):
     """THE sync point: one all-reduce per outer iteration, either as the
     fused sb x (sb+1) Gram||residual operand (``fuse_packet=True``, ours) or
     as the explicit variadic packet of the two separate operands
     (``fuse_packet=False``, the paper's two logical reductions packed into
-    one wire message)."""
+    one wire message).
+
+    Guard mode hands in the per-shard ``health`` word, which rides the SAME
+    wire message through the variadic packet regardless of ``fuse`` -- the
+    sharded health guards add ZERO extra collectives (the ``health_in_packet``
+    contract, statically verified by the analysis sweep).  Returns
+    ``(G, r, health)`` with ``health=None`` when no word was handed in.
+    """
     if axis is None:
-        return G_local, r_local
+        return G_local, r_local, health
+    if health is not None:
+        G, r, h = psum_variadic([G_local, r_local, health], axis)
+        return G, r, h
     if fuse:
         sb = G_local.shape[0]
         packet = jax.lax.psum(
             jnp.concatenate([G_local, r_local[:, None]], axis=1), axis)
-        return packet[:, :sb], packet[:, sb]
+        return packet[:, :sb], packet[:, sb], None
     G, r = psum_variadic([G_local, r_local], axis)
-    return G, r
+    return G, r, None
 
 
 def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
@@ -528,11 +590,139 @@ def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
 
 
 # --------------------------------------------------------------------------
+# In-scan health guards (DESIGN.md section 7)
+# --------------------------------------------------------------------------
+
+# Guard-trip reason bits (``SolveResult.metrics["guard_first_reason"]``).
+GUARD_NONFINITE = 1    # NaN/Inf in the packet or the solver carry
+GUARD_SHARD_LOSS = 2   # a shard's presence flag missing from the reduction
+GUARD_DIVERGENCE = 4   # packet-vector norm blew past its running envelope
+GUARD_MAGNITUDE = 8    # packet magnitude blew past its envelope (bit flips)
+GUARD_COND = 16        # Gram-diagonal condition proxy tripped
+GUARD_BREAKDOWN = 32   # the inner sweep itself produced nonfinite updates
+
+_HEALTH_WORDS = 5
+
+
+class GuardState(NamedTuple):
+    """Replicated guard telemetry threaded through the outer scan.  The
+    envelopes are running minima of ``1 + ||u||^2`` / ``1 + max|G_local|``
+    (the +1 floors them so an iterate growing from exactly zero -- the dual's
+    cold-started w -- cannot arm a zero envelope); divergence/magnitude
+    guards therefore need one clean outer step to arm."""
+    env_r: jax.Array        # running floor of 1 + packet-vector norm^2
+    env_g: jax.Array        # running floor of 1 + max |G_local|
+    trips: jax.Array        # int32 count of tripped outer steps
+    first_trip: jax.Array   # int32 outer index of the first trip (-1: clean)
+    first_reason: jax.Array  # int32 GUARD_* bitmask at the first trip
+    max_jitter: jax.Array   # largest diagonal jitter applied by a rescue
+
+
+def _guard_init(dtype) -> GuardState:
+    inf = jnp.asarray(jnp.inf, dtype)
+    return GuardState(inf, inf, jnp.zeros((), jnp.int32),
+                      jnp.full((), -1, jnp.int32), jnp.zeros((), jnp.int32),
+                      jnp.zeros((), dtype))
+
+
+def _guard_metrics(gstate: GuardState) -> dict:
+    return {"guard_trips": gstate.trips,
+            "guard_first_trip": gstate.first_trip,
+            "guard_first_reason": gstate.first_reason,
+            "guard_max_jitter": gstate.max_jitter}
+
+
+def _health_local(Gl, rl, carry, u, dtype):
+    """The per-shard health word (length ``_HEALTH_WORDS``) that rides the
+    packet psum: [nonfinite count in (G, r); nonfinite count in the carry;
+    local packet-vector squared norm; shard presence; max |G_local|].  All
+    entries are sums, so ONE psum yields the global verdicts."""
+    nonfinite = ((~jnp.isfinite(Gl)).sum()
+                 + (~jnp.isfinite(rl)).sum()).astype(dtype)
+    carry_bad = sum(((~jnp.isfinite(leaf)).sum()
+                     for leaf in jax.tree.leaves(carry)),
+                    jnp.zeros((), jnp.int32)).astype(dtype)
+    r2 = jnp.sum(u * u).astype(dtype)
+    present = jnp.ones((), dtype)
+    gmax = jnp.max(jnp.abs(Gl)).astype(dtype)
+    return jnp.stack([nonfinite, carry_bad, r2, present, gmax])
+
+
+def _guarded_sweep(bound, plan, A, base, s_k, b, flat, carry, O, h, gstate,
+                   step, n_shards, dtype):
+    """Check the reduced health word, then solve -- degrading instead of
+    corrupting.  Every decision derives from the replicated post-psum word
+    (plus the replicated A / dxs), so all shards branch identically.
+
+    The degradation ladder's first rung lives here: nonfinite packets,
+    missing shards and bit-flip-scale magnitudes SKIP the update (dxs = 0 --
+    one outer step of progress lost, carry untouched); divergence, the
+    condition proxy and an inner-sweep breakdown RESCUE it (sanitize, pick
+    the smallest working diagonal jitter, re-sweep).  Rung two (the s=1
+    tail) is driver-level; rung three (restart) is the supervisor's.
+    """
+    i32 = jnp.int32
+    boost = jnp.asarray(plan.guard_boost, dtype)
+    one = jnp.asarray(1.0, dtype)
+    bad_nonfinite = (h[0] + h[1]) > 0
+    bad_shard = h[3] != n_shards
+    r_now, g_now = one + h[2], one + h[4]
+    bad_div = r_now > boost * gstate.env_r
+    bad_mag = g_now > boost * gstate.env_g
+    diag = jnp.diagonal(A)
+    dmin = jnp.min(diag)
+    tiny = jnp.asarray(jnp.finfo(dtype).tiny, dtype)
+    cond_max = (plan.guard_cond_max if plan.guard_cond_max is not None
+                else 0.1 / float(jnp.finfo(dtype).eps))
+    bad_cond = (dmin <= 0) | (
+        jnp.max(diag) / jnp.maximum(dmin, tiny) > cond_max)
+    skip = bad_nonfinite | bad_shard | bad_mag
+    dxs = bound.inner_sweep(A, base, s_k, b, flat, carry, O)
+    bad_solve = ~jnp.all(jnp.isfinite(dxs))
+    rescue = (bad_div | bad_cond | bad_solve) & ~skip
+
+    def _rescue(_):
+        As = jnp.nan_to_num(A, nan=0.0, posinf=0.0, neginf=0.0)
+        bs = jnp.nan_to_num(base, nan=0.0, posinf=0.0, neginf=0.0)
+        jitter, _ok = choose_jitter(As)
+        eye = jnp.eye(s_k * b, dtype=dtype)
+        dj = bound.inner_sweep(As + jitter * eye, bs, s_k, b, flat, carry, O)
+        return jnp.where(jnp.isfinite(dj), dj, jnp.zeros_like(dj)), jitter
+
+    dxs, jitter = jax.lax.cond(
+        rescue, _rescue, lambda _: (dxs, jnp.zeros((), dtype)), None)
+    dxs = jnp.where(skip, jnp.zeros_like(dxs), dxs)
+    tripped = skip | rescue
+    reason = (bad_nonfinite.astype(i32) * GUARD_NONFINITE
+              + bad_shard.astype(i32) * GUARD_SHARD_LOSS
+              + bad_div.astype(i32) * GUARD_DIVERGENCE
+              + bad_mag.astype(i32) * GUARD_MAGNITUDE
+              + bad_cond.astype(i32) * GUARD_COND
+              + bad_solve.astype(i32) * GUARD_BREAKDOWN)
+    first = (gstate.first_trip < 0) & tripped
+    step_i = jnp.asarray(step, i32)
+    gstate = GuardState(
+        env_r=jnp.where(jnp.isfinite(r_now),
+                        jnp.minimum(gstate.env_r, r_now), gstate.env_r),
+        env_g=jnp.where(jnp.isfinite(g_now),
+                        jnp.minimum(gstate.env_g, g_now), gstate.env_g),
+        trips=gstate.trips + tripped.astype(i32),
+        first_trip=jnp.where(first, step_i, gstate.first_trip),
+        first_reason=jnp.where(first, reason, gstate.first_reason),
+        max_jitter=jnp.maximum(gstate.max_jitter, jitter))
+    ginfo = {"guard_tripped": tripped.astype(dtype),
+             "guard_reason": reason.astype(dtype),
+             "guard_jitter": jitter}
+    return dxs, gstate, ginfo
+
+
+# --------------------------------------------------------------------------
 # The one s-step body + driver
 # --------------------------------------------------------------------------
 
 def _outer_step(bound: BoundFormulation, plan: SolverPlan, s_k: int, carry,
-                idx_k, *, axis=None, collect=False):
+                idx_k, *, axis=None, collect=False, step=None, gstate=None,
+                n_shards=1):
     """ONE outer iteration of the s-step method -- the repo's only solver hot
     loop.  ``s_k`` is the number of inner blocks this outer iteration carries
     (``plan.s`` normally; ``iters % s`` for the ragged tail).
@@ -543,6 +733,14 @@ def _outer_step(bound: BoundFormulation, plan: SolverPlan, s_k: int, carry,
     matrix).  Distributed mode: the local contribution is reduced by
     :func:`_packet_reduce` and the regularizer + full overlap are added once,
     after the psum, on the replicated result.
+
+    Guard mode (``plan.guard``): the health word is computed on the local
+    contribution (AFTER any injected fault, so injection is detectable),
+    rides the one packet reduction, and the sweep runs through
+    :func:`_guarded_sweep`.  ``step`` is the outer-iteration index (traced;
+    only consumed by guards and fault hooks), ``gstate`` the
+    :class:`GuardState` threaded across outer steps, ``n_shards`` the
+    expected presence total.
     """
     b = plan.b
     sb = s_k * b
@@ -550,10 +748,18 @@ def _outer_step(bound: BoundFormulation, plan: SolverPlan, s_k: int, carry,
     dtype = bound.operand.dtype
     flat = idx_k.reshape(sb)
     dist = axis is not None
-    Gl, rl = gram_packet_sampled(bound.operand, flat, bound.packet_vector(carry),
+    u = bound.packet_vector(carry)
+    Gl, rl = gram_packet_sampled(bound.operand, flat, u,
                                  scale=bound.scale, scale_r=bound.scale_r,
                                  reg=0.0 if dist else bound.reg, plan=pp)
-    G, r = _packet_reduce(Gl, rl, axis, plan.fuse_packet)
+    if plan.fault is not None:
+        Gl, rl = plan.fault.apply_packet(Gl, rl, step=step, axis=axis)
+    health = None
+    if plan.guard:
+        health = _health_local(Gl, rl, carry, u, dtype)
+        if plan.fault is not None:
+            health = plan.fault.apply_health(health, step=step, axis=axis)
+    G, r, h = _packet_reduce(Gl, rl, axis, plan.fuse_packet, health)
     if dist:
         O = overlap_matrix(flat).astype(dtype)             # shared-seed trick
         A = G + bound.reg * O
@@ -566,12 +772,18 @@ def _outer_step(bound: BoundFormulation, plan: SolverPlan, s_k: int, carry,
         # duplicate-index overlap terms (O's diagonal is exactly 1).
         A = G + bound.reg * (O - jnp.eye(sb, dtype=dtype))
     base = bound.base(r, carry, flat)
-    dxs = bound.inner_sweep(A, base, s_k, b, flat, carry, O)
+    if plan.guard:
+        dxs, gstate, ginfo = _guarded_sweep(bound, plan, A, base, s_k, b,
+                                            flat, carry, O, h, gstate, step,
+                                            n_shards, dtype)
+    else:
+        dxs = bound.inner_sweep(A, base, s_k, b, flat, carry, O)
+        ginfo = None
 
     if not collect:
         # Fast path (distributed): apply all s_k blocks in one deferred
         # update -- sum_j Y_j^T dx_j == Y^T dxs.
-        return bound.update(carry, flat, dxs, pp), None
+        return bound.update(carry, flat, dxs, pp), gstate, None
 
     # Metric path: reconstruct the per-inner-iteration trajectory locally.
     def inner(c, j):
@@ -583,7 +795,12 @@ def _outer_step(bound: BoundFormulation, plan: SolverPlan, s_k: int, carry,
     if plan.track_cond:
         # G already carries the regularized diagonal (local packet reg).
         hist["gram_cond"] = jnp.full((s_k,), jnp.linalg.cond(G))
-    return carry, hist
+    if ginfo is not None:
+        # Guard telemetry broadcast to the inner-iteration grid so it
+        # concatenates with the other history series.
+        for k, v in ginfo.items():
+            hist[k] = jnp.full((s_k,), v)
+    return carry, gstate, hist
 
 
 def _resolve_form(formulation) -> "Formulation":
@@ -611,42 +828,56 @@ def _check_idx(idx, iters: int, b: int) -> None:
 
 
 def _drive(bound: BoundFormulation, plan: SolverPlan, idx, *, axis=None,
-           collect=True):
+           collect=True, n_shards=1, step0=0):
     """The engine's s-step scan: ``iters // s`` outer iterations through ONE
     ``lax.scan`` over :func:`_outer_step`, plus (when ``iters % s != 0``) a
-    single ragged call of the same body with ``s_k = iters % s``."""
+    single ragged call of the same body with ``s_k = iters % s``.
+
+    ``step0`` offsets the outer-iteration indices handed to the guard/fault
+    hooks, so a segmented solve (the supervisor's checkpointed resume) keeps
+    globally meaningful step numbers.  Returns ``(carry, history, gstate)``
+    with ``gstate=None`` when guards are off.
+    """
     s, b = plan.s, plan.b
     iters = idx.shape[0]
     outer_full, rem = divmod(iters, s)
     carry = bound.init_carry(axes=None if axis is None else _axes(axis))
+    gstate = _guard_init(bound.operand.dtype) if plan.guard else None
     hists = []
     if outer_full:
-        def outer(c, idx_k):
-            return _outer_step(bound, plan, s, c, idx_k, axis=axis,
-                               collect=collect)
-        carry, hist = jax.lax.scan(outer, carry,
-                                   idx[:outer_full * s].reshape(outer_full, s, b),
-                                   unroll=plan.unroll)
+        def outer(cg, xs):
+            step, idx_k = xs
+            c, g, hist = _outer_step(bound, plan, s, cg[0], idx_k, axis=axis,
+                                     collect=collect, step=step, gstate=cg[1],
+                                     n_shards=n_shards)
+            return (c, g), hist
+        steps = jnp.arange(outer_full, dtype=jnp.int32) + step0
+        (carry, gstate), hist = jax.lax.scan(
+            outer, (carry, gstate),
+            (steps, idx[:outer_full * s].reshape(outer_full, s, b)),
+            unroll=plan.unroll)
         if collect:
             hists.append({k: v.reshape(outer_full * s, *v.shape[2:])
                           for k, v in hist.items()})
     if rem:
-        carry, hist = _outer_step(bound, plan, rem, carry, idx[outer_full * s:],
-                                  axis=axis, collect=collect)
+        carry, gstate, hist = _outer_step(
+            bound, plan, rem, carry, idx[outer_full * s:], axis=axis,
+            collect=collect, step=jnp.asarray(outer_full + step0, jnp.int32),
+            gstate=gstate, n_shards=n_shards)
         if collect:
             hists.append(hist)
     if len(hists) > 1:
         history = {k: jnp.concatenate([h[k] for h in hists]) for k in hists[0]}
     else:
         history = hists[0] if hists else {}
-    return carry, history
+    return carry, history, gstate
 
 
 def s_step_solve(formulation: Formulation | str, plan: SolverPlan,
                  X: jax.Array, y: jax.Array, lam: float, iters: int,
                  key: jax.Array | None = None, *, x0: jax.Array | None = None,
                  idx: jax.Array | None = None,
-                 w_ref: jax.Array | None = None) -> SolveResult:
+                 w_ref: jax.Array | None = None, step0: int = 0) -> SolveResult:
     """Single-device s-step solve.  ``plan.s == 1`` IS the classical variant;
     larger ``s`` trades bandwidth for latency without changing the iterates
     (the paper's central claim, preserved per-formulation by construction).
@@ -654,6 +885,14 @@ def s_step_solve(formulation: Formulation | str, plan: SolverPlan,
     ``x0`` warm-starts the formulation's own iterate (w for primal, alpha for
     dual).  ``idx`` overrides the sampled index stream -- the classical and
     CA runs that share it produce identical iterates in exact arithmetic.
+    ``step0`` offsets the guard/fault outer-step numbering (segmented solves).
+
+    With ``plan.guard`` the result's ``metrics`` carry the guard telemetry,
+    and a trip at ``s > 1`` engages rung two of the degradation ladder: the
+    clean prefix is replayed at ``s``, the remaining iterations run at
+    ``s = 1`` so any further breakdown poisons one iteration instead of
+    ``s`` (eager calls only -- under ``jit`` the ladder is skipped and the
+    in-scan recovery of rung one is the whole story).
     """
     form = _resolve_form(formulation)
     d, n = X.shape
@@ -662,19 +901,70 @@ def s_step_solve(formulation: Formulation | str, plan: SolverPlan,
     else:
         _check_idx(idx, iters, plan.b)
     bound = form.bind(X, y, lam, x0=x0, w_ref=w_ref)
-    (w, alpha), history = _drive(bound, plan, idx)
-    return SolveResult(w, alpha, history)
+    (w, alpha), history, gstate = _drive(bound, plan, idx, step0=step0)
+    metrics = {}
+    if plan.guard:
+        metrics = _guard_metrics(gstate)
+        if plan.s > 1 and not isinstance(gstate.first_trip, jax.core.Tracer):
+            first = int(jax.device_get(gstate.first_trip))
+            if first >= 0:
+                return _degrade_to_s1_tail(form, plan, X, y, lam, idx, first,
+                                           step0, x0, w_ref, metrics)
+    return SolveResult(w, alpha, history, metrics)
+
+
+def _degrade_to_s1_tail(form, plan, X, y, lam, idx, first, step0, x0, w_ref,
+                        metrics):
+    """Degradation ladder, rung two (driver-level): a guard tripped at outer
+    step ``first`` of an ``s > 1`` solve.  Replay the clean prefix at the
+    original ``s`` (deterministic: the same index stream over the same data
+    reproduces the same clean steps), warm-start from its iterate, and run
+    the remaining iterations at ``s = 1`` -- further breakdowns now poison a
+    single iteration's deferred update instead of ``s`` of them.  The tail
+    keeps the guard (and any injected fault, remapped to fire at its outer
+    step) so recovery is exercised, not dodged."""
+    n_clean = (first - step0) * plan.s
+    hists = []
+    if n_clean > 0:
+        pre = s_step_solve(form, plan, X, y, lam, n_clean, None, x0=x0,
+                           idx=idx[:n_clean], w_ref=w_ref, step0=step0)
+        hists.append(pre.history)
+        x0 = pre.w if form.operand_layout == "rows" else pre.alpha
+    tail_plan = dataclasses.replace(plan, s=1)
+    tail = s_step_solve(form, tail_plan, X, y, lam, idx.shape[0] - n_clean,
+                        None, x0=x0, idx=idx[n_clean:], w_ref=w_ref,
+                        step0=first)
+    if hists:
+        history = {k: jnp.concatenate([h[k] for h in hists + [tail.history]])
+                   for k in tail.history}
+    else:
+        history = tail.history
+    metrics = dict(metrics)
+    metrics["s1_tail_from_outer"] = first
+    metrics["s1_tail_from_iter"] = n_clean
+    metrics["s1_tail_trips"] = tail.metrics["guard_trips"]
+    metrics["guard_max_jitter"] = jnp.maximum(
+        metrics["guard_max_jitter"], tail.metrics["guard_max_jitter"])
+    return SolveResult(tail.w, tail.alpha, history, metrics)
 
 
 def s_step_solve_sharded(formulation: Formulation | str, plan: SolverPlan,
                          mesh: Mesh, X: jax.Array, y: jax.Array, lam: float,
                          iters: int, key: jax.Array | None = None, *,
-                         axis="shards", idx: jax.Array | None = None):
+                         axis="shards", idx: jax.Array | None = None,
+                         x0: jax.Array | None = None, step0: int = 0):
     """Distributed s-step solve: the SAME driver as :func:`s_step_solve`,
     wrapped in ``shard_map`` with the formulation's 1D layout.  The only
     behavioural differences are the inserted packet all-reduce (one per outer
     iteration) and the skipped metric reconstruction.  Returns ``(w, alpha)``
-    with the formulation's output sharding.
+    with the formulation's output sharding -- or ``(w, alpha, metrics)`` when
+    ``plan.guard`` is set (the replicated guard telemetry, same keys as the
+    local solve's ``SolveResult.metrics``).
+
+    ``x0`` warm-starts the formulation's own replicated iterate (w for the
+    primal family, alpha for the dual); the device-varying half of the carry
+    is re-derived shard-locally (see the formulations' ``init_carry``), which
+    is what the supervisor's checkpointed elastic restart rides.
     """
     form = _resolve_form(formulation)
     d, n = X.shape
@@ -684,15 +974,28 @@ def s_step_solve_sharded(formulation: Formulation | str, plan: SolverPlan,
         _check_idx(idx, iters, plan.b)
     n_shards = math.prod(mesh.shape[a] for a in _axes(axis))
     X, y = form.pad_shards(X, y, n_shards)
+    has_x0 = x0 is not None
 
-    def body(Xl, yl, idx_rep):
-        bound = form.bind_shard(Xl, yl, lam, d=d, n=n)
-        carry, _ = _drive(bound, plan, idx_rep, axis=axis, collect=False)
-        return carry
+    def body(Xl, yl, idx_rep, *x0_rep):
+        kw = {"x0": x0_rep[0]} if has_x0 else {}
+        bound = form.bind_shard(Xl, yl, lam, d=d, n=n, **kw)
+        carry, _, gstate = _drive(bound, plan, idx_rep, axis=axis,
+                                  collect=False, n_shards=n_shards,
+                                  step0=step0)
+        return (carry, gstate) if plan.guard else carry
 
-    fn = compat.shard_map(body, mesh=mesh, in_specs=form.dist_in_specs(axis),
-                          out_specs=form.dist_out_specs(axis))
-    w, alpha = fn(X, y, idx)
+    in_specs = form.dist_in_specs(axis) + ((P(None),) if has_x0 else ())
+    out_specs = form.dist_out_specs(axis)
+    if plan.guard:
+        out_specs = (out_specs, GuardState(*(P(),) * len(GuardState._fields)))
+    fn = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs)
+    args = (X, y, idx) + ((x0,) if has_x0 else ())
+    if plan.guard:
+        (w, alpha), gstate = fn(*args)
+        w, alpha = form.dist_finalize(w, alpha, d, n)
+        return w, alpha, _guard_metrics(gstate)
+    w, alpha = fn(*args)
     return form.dist_finalize(w, alpha, d, n)
 
 

@@ -115,8 +115,10 @@ class ProximalElasticNet:
         # the nonsmooth term adds ZERO communication: same contract as the
         # primal ridge.  ``lowering_kwargs`` makes the analysis engine lower
         # with lam1 > 0 so the prox code path (not the lam1=0 ridge branch)
-        # is the one verified.
-        return SolverContracts(lowering_kwargs=(("lam1", 1e-3),))
+        # is the one verified.  ``health_in_packet``: the guard word rides
+        # the same psum (verified with guard=True lowerings).
+        return SolverContracts(lowering_kwargs=(("lam1", 1e-3),),
+                               health_in_packet=True)
 
     def sample_dim(self, d, n):
         return d
@@ -129,9 +131,9 @@ class ProximalElasticNet:
     def pad_shards(self, X, y, n_shards):
         return _pad_to(X, n_shards, 1), _pad_to(y, n_shards, 0)
 
-    def bind_shard(self, Xl, yl, lam, *, d, n):
+    def bind_shard(self, Xl, yl, lam, *, d, n, x0=None):
         return _BoundProximal(operand=RowMajorOperand(Xl), y=yl, lam=lam,
-                              n=n, d=d, lam1=self.lam1)
+                              n=n, d=d, w0=x0, lam1=self.lam1)
 
     def dist_in_specs(self, axis):
         return P(None, axis), P(axis), P(None)
@@ -191,14 +193,18 @@ def ca_proximal_bcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int,
                     w0: jax.Array | None = None, idx: jax.Array | None = None,
                     w_ref: jax.Array | None = None, track_cond: bool = False,
                     impl: str | None = None,
-                    tiles: tuple[int, int] | None = None) -> SolveResult:
+                    tiles: tuple[int, int] | None = None, guard: bool = False,
+                    fault=None, step0: int = 0) -> SolveResult:
     """CA proximal BCD (arXiv:1712.06047): one sb x sb Gram packet per outer
     iteration, then ``s`` local prox-thresholded block solves.  Same index
     stream as :func:`proximal_bcd` => identical iterates in exact arithmetic;
-    ``iters % s != 0`` runs a ragged final outer iteration."""
-    plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles, track_cond=track_cond)
+    ``iters % s != 0`` runs a ragged final outer iteration.
+    ``guard``/``fault``/``step0``: health guard, test-only injection hook,
+    and segmented-solve step offset (DESIGN.md section 7)."""
+    plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles, track_cond=track_cond,
+                      guard=guard, fault=fault)
     return s_step_solve(ProximalElasticNet(lam1=lam1), plan, X, y, lam, iters,
-                        key, x0=w0, idx=idx, w_ref=w_ref)
+                        key, x0=w0, idx=idx, w_ref=w_ref, step0=step0)
 
 
 def ca_proximal_bcd_sharded(mesh, X: jax.Array, y: jax.Array, lam: float,
@@ -207,16 +213,22 @@ def ca_proximal_bcd_sharded(mesh, X: jax.Array, y: jax.Array, lam: float,
                             fuse_packet: bool = True,
                             idx: jax.Array | None = None, unroll: int = 1,
                             impl: str | None = None,
-                            tiles: tuple[int, int] | None = None):
+                            tiles: tuple[int, int] | None = None,
+                            guard: bool = False, fault=None,
+                            x0: jax.Array | None = None, step0: int = 0):
     """Distributed CA proximal BCD: X sharded over columns (the primal's
     1D-block-column layout), ONE packet all-reduce per outer iteration --
     the soft-threshold runs on the replicated post-reduce packet, so the
     nonsmooth term adds zero communication.  Returns (w replicated, alpha
-    sharded over n)."""
+    sharded over n) -- plus the replicated guard metrics dict when ``guard``
+    is set.  ``guard``/``fault``/``x0``/``step0`` as in
+    :func:`repro.core.distributed.ca_bcd_sharded`."""
     plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles,
-                      fuse_packet=fuse_packet, unroll=unroll)
+                      fuse_packet=fuse_packet, unroll=unroll, guard=guard,
+                      fault=fault)
     return s_step_solve_sharded(ProximalElasticNet(lam1=lam1), plan, mesh, X,
-                                y, lam, iters, key, axis=axis, idx=idx)
+                                y, lam, iters, key, axis=axis, idx=idx, x0=x0,
+                                step0=step0)
 
 
 register_formulation(ProximalElasticNet())

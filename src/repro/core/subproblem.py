@@ -27,6 +27,57 @@ def solve_spd(A: jax.Array, rhs: jax.Array) -> jax.Array:
     return jsl.cho_solve((chol, True), rhs)
 
 
+# Relative diagonal-jitter escalation ladder (DESIGN.md section 7).  Level 0
+# probes the unmodified matrix, so a healthy block pays no perturbation; the
+# ladder is bounded above by max|diag(A)| itself -- past that the block carries
+# no usable curvature and the solve is flagged instead of jittered further.
+JITTER_LEVELS = (0.0, 1e-12, 1e-9, 1e-6, 1e-3, 1.0)
+
+
+def choose_jitter(A: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Smallest relative diagonal jitter that makes ``A`` Cholesky-clean.
+
+    Probes ``A + lev * scale * I`` for each level of :data:`JITTER_LEVELS`
+    (``scale = max(|diag(A)|, 1)``) and returns ``(jitter, ok)``: the smallest
+    absolute jitter whose Cholesky factor is finite with a strictly positive
+    diagonal, and whether any level succeeded.  Traceable (no host branching):
+    all levels are factored and the winner selected by ``where`` -- the ladder
+    only runs on the engine's degraded path, never per clean outer step.
+    """
+    diag = jnp.abs(jnp.diagonal(A))
+    scale = jnp.maximum(jnp.max(diag), jnp.asarray(1.0, A.dtype))
+    eye = jnp.eye(A.shape[0], dtype=A.dtype)
+    jitter = scale * jnp.asarray(JITTER_LEVELS[-1], A.dtype)
+    ok = jnp.zeros((), bool)
+    for lev in reversed(JITTER_LEVELS):
+        j = scale * jnp.asarray(lev, A.dtype)
+        chol = jsl.cholesky(A + j * eye, lower=True)
+        good = jnp.all(jnp.isfinite(chol)) & jnp.all(jnp.diagonal(chol) > 0)
+        jitter = jnp.where(good, j, jitter)
+        ok = ok | good
+    return jitter, ok
+
+
+def solve_spd_jittered(A: jax.Array, rhs: jax.Array
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """NaN-free SPD solve: ``solve_spd`` hardened for singular / corrupted A.
+
+    Sanitizes nonfinite entries, escalates diagonal jitter through
+    :func:`choose_jitter`, and backstops any residual nonfinite solution with
+    zeros.  Returns ``(x, jitter, ok)`` -- ``ok=False`` flags that even the
+    bounded ladder could not produce a clean factorization (the zero update is
+    then the correct degraded step: skip, don't corrupt).  A rank-deficient
+    block from duplicate sampled indices at ``lam = 0`` is the canonical
+    caller: plain ``solve_spd`` returns NaN there (regression-tested).
+    """
+    A = jnp.nan_to_num(A, nan=0.0, posinf=0.0, neginf=0.0)
+    rhs = jnp.nan_to_num(rhs, nan=0.0, posinf=0.0, neginf=0.0)
+    jitter, ok = choose_jitter(A)
+    x = solve_spd(A + jitter * jnp.eye(A.shape[0], dtype=A.dtype), rhs)
+    finite = jnp.all(jnp.isfinite(x))
+    return jnp.where(finite, x, jnp.zeros_like(x)), jitter, ok & finite
+
+
 def block_forward_substitution(A: jax.Array, base: jax.Array, s: int, b: int) -> jax.Array:
     """Solve the block lower-triangular sweep at the heart of CA-BCD/CA-BDCD.
 

@@ -1,0 +1,105 @@
+"""Deterministic fault injection for the s-step solvers (test-only hook).
+
+A :class:`FaultPlan` describes ONE fault -- what kind, at which outer step,
+on which shard -- and is threaded into the engine's hot loop through
+``SolverPlan.fault`` (every solver wrapper and ``lower_solver`` forward a
+``fault=`` kwarg).  The two hooks are called at fixed points of
+``engine._outer_step``:
+
+* ``apply_packet(Gl, rl, step=, axis=)`` -- corrupt the shard's LOCAL packet
+  contribution before the health word is computed, so injected damage is
+  visible to the guard exactly the way real damage would be (a NaN-ed
+  reduction input, a bit-flipped Gram entry, a zeroed contribution).
+* ``apply_health(health, step=, axis=)`` -- corrupt the health word itself;
+  only ``drop_shard`` uses it (a dropped worker contributes neither data nor
+  presence, so its whole word is zeroed and the reduced presence count comes
+  up short -> ``GUARD_SHARD_LOSS``).
+
+Everything is deterministic and trace-friendly: the fault fires when the
+traced outer-step index equals ``step`` (and, sharded, when
+``lax.axis_index(axis) == shard``), and the bit-flip target entry is drawn
+from a seed-keyed ``random.Random`` at TRACE time -- same plan, same fault,
+every run.  ``device_loss`` is deliberately inert here: losing a device is
+not a wrong number inside the scan, it is the process-level event the
+supervisor (``repro.faults.supervisor``) simulates by raising
+:class:`~repro.faults.DeviceLostError` at the segment boundary containing
+``step`` and restarting on the surviving mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+
+import jax
+import jax.numpy as jnp
+
+KINDS = ("nan_packet", "bitflip", "drop_shard", "device_loss")
+
+# Bit-flip scale: adding 2^46 * (1 + |x|) to a float perturbs high-exponent
+# bits the way a flipped exponent/mantissa-high bit would -- large enough to
+# blow the magnitude envelope, finite so the nonfinite guard does NOT fire
+# (the two detection paths stay distinguishable in tests).
+_BITFLIP_SCALE = 2.0 ** 46
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """One injected fault.
+
+    Args:
+      kind: one of :data:`KINDS`.
+      step: global outer-step index at which the fault fires (``step0``-aware:
+        a checkpoint-resumed segment sees the same global numbering).
+      shard: target shard for sharded runs (local runs always hit).
+      seed: keys the deterministic bit-flip entry choice.
+      survivors: for ``device_loss``, the world size after the loss (consumed
+        by the supervisor; ``None`` = half the current mesh, at least 1).
+    """
+    kind: str
+    step: int
+    shard: int = 0
+    seed: int = 0
+    survivors: int | None = None
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"kind={self.kind!r} must be one of {KINDS}")
+        if self.step < 0:
+            raise ValueError(f"step={self.step} must be >= 0")
+        if self.shard < 0:
+            raise ValueError(f"shard={self.shard} must be >= 0")
+
+    # ------------------------------------------------------------ hooks --
+    def _fire(self, step, axis):
+        hit = jnp.asarray(step, jnp.int32) == self.step
+        if axis is not None:
+            name = axis[0] if isinstance(axis, (tuple, list)) else axis
+            hit = hit & (jax.lax.axis_index(name) == self.shard)
+        return hit
+
+    def apply_packet(self, Gl, rl, *, step, axis):
+        if self.kind == "nan_packet":
+            fire = self._fire(step, axis)
+            bad = jnp.asarray(jnp.nan, Gl.dtype)
+            return (jnp.where(fire, jnp.full_like(Gl, bad), Gl),
+                    jnp.where(fire, jnp.full_like(rl, bad), rl))
+        if self.kind == "bitflip":
+            fire = self._fire(step, axis)
+            rng = random.Random(f"{self.seed}:{Gl.shape}")
+            i = rng.randrange(Gl.shape[0])
+            j = rng.randrange(Gl.shape[1])
+            entry = Gl[i, j]
+            flipped = entry + jnp.asarray(_BITFLIP_SCALE, Gl.dtype) * (
+                1 + jnp.abs(entry))
+            return Gl.at[i, j].set(jnp.where(fire, flipped, entry)), rl
+        if self.kind == "drop_shard":
+            fire = self._fire(step, axis)
+            return (jnp.where(fire, jnp.zeros_like(Gl), Gl),
+                    jnp.where(fire, jnp.zeros_like(rl), rl))
+        return Gl, rl            # device_loss: supervisor-level, inert here
+
+    def apply_health(self, health, *, step, axis):
+        if self.kind == "drop_shard":
+            fire = self._fire(step, axis)
+            return jnp.where(fire, jnp.zeros_like(health), health)
+        return health

@@ -34,6 +34,16 @@ def plan_mesh(n_devices: int, tp: int = 16, pods: int | None = None):
     return compat.make_mesh((rest, tp), ("data", "model"))
 
 
+def plan_solver_mesh(n_devices: int, name: str = "shards"):
+    """The solver-layer counterpart of :func:`plan_mesh`: a 1D mesh over the
+    surviving world size, capped at the devices actually present.  The s-step
+    engine's ``Formulation.pad_shards`` re-pads the logical operands to any
+    shard count, so an elastic restart after device loss is just this mesh
+    plus a warm-start from the newest checkpoint (``faults.solve_supervised``)."""
+    n = max(1, min(n_devices, len(jax.devices())))
+    return compat.make_mesh((n,), (name,))
+
+
 def reshard_state(state, model_cfg, new_mesh):
     """Place a (host or differently-sharded) train state onto new_mesh."""
     sh, _ = train_step_shardings(model_cfg, new_mesh)

@@ -25,11 +25,13 @@ def _register_sharded(form):
                                    register_solver, s_step_solve_sharded)
 
     def sharded(mesh, X, y, lam, b, s, iters, key, *, axis="shards",
-                fuse_packet=True, idx=None, unroll=1, impl=None, tiles=None):
+                fuse_packet=True, idx=None, unroll=1, impl=None, tiles=None,
+                guard=False, fault=None, x0=None, step0=0):
         plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles,
-                          fuse_packet=fuse_packet, unroll=unroll)
+                          fuse_packet=fuse_packet, unroll=unroll,
+                          guard=guard, fault=fault)
         return s_step_solve_sharded(form, plan, mesh, X, y, lam, iters, key,
-                                    axis=axis, idx=idx)
+                                    axis=axis, idx=idx, x0=x0, step0=step0)
 
     register_formulation(form)
     register_solver(form.name, "sharded", sharded)
@@ -43,8 +45,8 @@ def check_sweep_pass():
     report = run_sweep()
     assert report.ok, "\n" + report.summary()
     hlo = next(p for p in report.passes if p.name == "hlo")
-    # 3 formulations x (4 local + 8 sharded + 1 x64) cases
-    assert len(hlo.cases) == 39, hlo.cases
+    # 3 formulations x (4 local + 8 sharded + 1 x64 + 6 guard) cases
+    assert len(hlo.cases) == 57, hlo.cases
     assert not hlo.skipped, hlo.skipped
     plan = next(p for p in report.passes if p.name == "plan")
     assert len(plan.cases) >= 11, plan.cases
@@ -84,6 +86,45 @@ def check_mutation_second_psum():
     assert "all-reduce" in v.message, v  # names the offending ops
     print("found:", v)
     print("mutation_second_psum OK")
+
+
+def check_mutation_health_guard():
+    """A formulation claiming ``health_in_packet`` whose update adds a
+    second psum must fail the GUARD-armed collective-count sweep -- the
+    zero-extra-collectives guarantee has teeth, not just the base budget."""
+    from repro.core.engine import PrimalRidge, SolverContracts, _BoundPrimal
+
+    @dataclasses.dataclass(frozen=True)
+    class _GuardPsumBound(_BoundPrimal):
+        def update(self, carry, idx, dx, pp):
+            dx = jax.lax.psum(dx, "shards") / 8.0
+            return super().update(carry, idx, dx, pp)
+
+    class GuardPsumPrimal(PrimalRidge):
+        name = "evil-guard-psum"
+
+        def contracts(self):
+            return SolverContracts(health_in_packet=True)
+
+        def bind_shard(self, Xl, yl, lam, *, d, n, x0=None):
+            bound = super().bind_shard(Xl, yl, lam, d=d, n=n, x0=x0)
+            return _GuardPsumBound(**{f.name: getattr(bound, f.name)
+                                      for f in dataclasses.fields(bound)})
+
+    _register_sharded(GuardPsumPrimal())
+
+    from repro.analysis import run_hlo_pass
+    rep = run_hlo_pass(formulations=["evil-guard-psum"])
+    assert not rep.ok, "sweep failed to catch the guarded second psum"
+    counts = [v for v in rep.violations if v.check == "collective-count"]
+    assert counts, rep.violations
+    guarded = [v for v in counts if ",guard]" in v.subject]
+    assert guarded, counts   # specifically the guard-armed lowerings fail
+    v = guarded[0]
+    assert "evil-guard-psum/sharded" in v.subject, v
+    assert "all-reduce" in v.message, v
+    print("found:", v)
+    print("mutation_health_guard OK")
 
 
 def check_mutation_pretranspose():
@@ -131,7 +172,8 @@ def check_mutation_oversized_tile():
 
 CHECKS = {f.__name__.replace("check_", ""): f for f in
           (check_sweep_pass, check_mutation_second_psum,
-           check_mutation_pretranspose, check_mutation_oversized_tile)}
+           check_mutation_health_guard, check_mutation_pretranspose,
+           check_mutation_oversized_tile)}
 
 if __name__ == "__main__":
     CHECKS[sys.argv[1]]()

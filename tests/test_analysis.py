@@ -44,6 +44,13 @@ def test_mutation_second_psum_caught():
     _run("mutation_second_psum")
 
 
+def test_mutation_health_guard_caught():
+    """A second psum under a claimed health_in_packet contract must fail the
+    guard-armed lowerings specifically (the PR-7 zero-extra-collectives
+    guarantee)."""
+    _run("mutation_health_guard")
+
+
 def test_mutation_pretranspose_caught():
     _run("mutation_pretranspose")
 

@@ -5,6 +5,7 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint import CheckpointManager
 from repro.data import TokenStream
@@ -77,6 +78,51 @@ def test_atomicity_no_tmp_left(tmp_path):
     mgr.save(1, _state(1))
     assert not [f for f in os.listdir(str(tmp_path)) if f.endswith(".tmp")]
     assert open(os.path.join(str(tmp_path), "LATEST")).read() == "step_0000000001"
+
+
+def _break_directory(path):
+    """Replace the checkpoint directory with a regular file so every write
+    inside it fails (works under root, unlike permission bits)."""
+    import shutil
+    shutil.rmtree(path)
+    with open(path, "w") as f:
+        f.write("not a directory")
+
+
+def test_async_writer_error_surfaces_on_next_save(tmp_path):
+    """A failed background write must NOT vanish with the thread: the next
+    save() re-raises it as CheckpointWriteError (chained to the original)."""
+    from repro.checkpoint import CheckpointWriteError
+    d = str(tmp_path / "ckpt")
+    mgr = CheckpointManager(d, async_save=True)
+    mgr.save(1, _state(1))
+    mgr.wait()                       # clean write goes through
+    assert mgr.all_steps() == [1]
+    _break_directory(d)
+    mgr.save(2, _state(2))           # writer thread dies silently...
+    with pytest.raises(CheckpointWriteError) as exc:
+        mgr.save(3, _state(3))       # ...and THIS surfaces it
+    assert exc.value.__cause__ is not None
+
+
+def test_async_writer_error_surfaces_on_close(tmp_path):
+    from repro.checkpoint import CheckpointWriteError
+    d = str(tmp_path / "ckpt")
+    mgr = CheckpointManager(d, async_save=True)
+    _break_directory(d)
+    mgr.save(1, _state(1))
+    with pytest.raises(CheckpointWriteError):
+        mgr.close()
+    mgr.close()                      # error is consumed; close is idempotent
+
+
+def test_sync_save_raises_immediately(tmp_path):
+    from repro.checkpoint import CheckpointWriteError
+    d = str(tmp_path / "ckpt")
+    mgr = CheckpointManager(d, async_save=False)
+    _break_directory(d)
+    with pytest.raises(CheckpointWriteError):
+        mgr.save(1, _state(1))
 
 
 def test_structure_mismatch_rejected(tmp_path):

@@ -117,7 +117,11 @@ def test_wrapper_backcompat_signatures(problem):
     extras, SolveResult fields, per-iteration history lengths."""
     X, y = problem
     res = bcd(X, y, LAM, 8, 12, jax.random.key(5))
-    assert res._fields == ("w", "alpha", "history")
+    # PR 7 appended the defaulted ``metrics`` field; the PR-2 prefix is
+    # pinned so positional access keeps meaning what it always did.
+    assert res._fields == ("w", "alpha", "history", "metrics")
+    assert res._fields[:3] == ("w", "alpha", "history")
+    assert res.metrics == {}                     # unguarded: no telemetry
     assert res.w.shape == (X.shape[0],) and res.alpha.shape == (X.shape[1],)
     assert res.history["objective"].shape == (12,)
 
