@@ -1,4 +1,4 @@
-.PHONY: test test-all test-fast bench bench-smoke check-contracts check-faults
+.PHONY: test test-all test-fast bench bench-smoke bench-serve-smoke check-contracts check-faults
 
 # Tier-1 verify (ROADMAP.md): the full suite, fail-fast.
 test:
@@ -21,6 +21,13 @@ bench:
 # packet vs the gather-then-pack baseline).
 bench-smoke:
 	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m benchmarks.run --smoke
+
+# Just the multi-tenant solve-throughput rows (solves/s at T = 1/64/4096 and
+# the 64v1 amortization ratio; DESIGN.md section 8).  --only never clobbers
+# the committed BENCH_smoke.json baseline -- the canonical `bench-smoke` run
+# (which includes serve_bench) is what refreshes it.
+bench-serve-smoke:
+	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m benchmarks.run --smoke --only serve_bench
 
 # Static contract sweep (DESIGN.md section 6): lower every registered solver
 # and verify the declared communication/memory contracts, validate kernel

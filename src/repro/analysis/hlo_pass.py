@@ -126,6 +126,48 @@ def _case_geometry(form, P):
     return d, n, sb, op_shape, contraction
 
 
+TENANTS_SWEPT = (1, 8, 64)
+
+
+def _check_batched_contract(name, contract, mesh, d, n, sb, rep):
+    """DESIGN.md section 8, machine-checked: the T-tenant sharded lowering
+    emits exactly ``sync_per_outer * H`` all-reduces for every T -- the
+    tenant axis adds ZERO sync points -- and the per-step wire payload is
+    ``sb^2 + T*sb`` words, i.e. the Gram part is NOT scaled by T (only the
+    (T, sb) per-tenant residual directions ride along).  The payload law is
+    asserted exactly: ``bytes(T) == bytes(1) + (T-1)*sb*word*H``."""
+    from repro.core.distributed import lower_solver_batched
+    from repro.core.hlo_analysis import collective_summary
+
+    coeff_names = tuple(k for k, _ in contract.lowering_kwargs)
+    word = 4                       # the sweep lowers at dtype=float32
+    payload = {}
+    for tenants in TENANTS_SWEPT:
+        iters_list = (ITERS_EVEN, ITERS_RAGGED) if tenants == 8 \
+            else (ITERS_EVEN,)     # ragged tail once; T-sweep at even iters
+        for iters in iters_list:
+            case = rep.case(f"{name}/batched[T={tenants},iters={iters}]")
+            compiled = lower_solver_batched(
+                name, mesh, d, n, tenants, B, S, iters,
+                unroll=max(iters // S, 1), coeff_names=coeff_names)
+            txt = compiled.as_text()
+            H = _outer_count(iters, S)
+            _check_collectives(txt, contract, contract.sync_per_outer * H,
+                               case, rep.violations)
+            if iters == ITERS_EVEN:
+                payload[tenants] = collective_summary(txt).operand_bytes
+    H = _outer_count(ITERS_EVEN, S)
+    base = payload[TENANTS_SWEPT[0]]
+    for tenants in TENANTS_SWEPT[1:]:
+        want = base + (tenants - 1) * sb * word * H
+        if payload[tenants] != want:
+            rep.violations.append(Violation(
+                "gram-payload-scaled", f"{name}/batched[T={tenants}]",
+                f"wire payload {payload[tenants]:.0f}B != "
+                f"{want:.0f}B (= T=1 payload + (T-1)*sb*word*H): the "
+                f"shared sb x sb Gram must not scale with the tenant axis"))
+
+
 def run_hlo_pass(formulations=None) -> PassReport:
     """Sweep the solver registry; returns the pass report.
 
@@ -228,6 +270,10 @@ def run_hlo_pass(formulations=None) -> PassReport:
                         if contract.operand_transpose_free:
                             _check_no_transpose(txt, op_shape, case,
                                                 rep.violations)
+
+            # ---- tenant-batched: H all-reduces INDEPENDENT of T -----------
+            if contract.tenant_batched:
+                _check_batched_contract(name, contract, mesh, d, n, sb, rep)
 
             # ---- one x64 lowering: the packet must reduce in f64 ----------
             if contract.f64_packet:

@@ -2,10 +2,13 @@
 dual block coordinate descent (CA-BCD / CA-BDCD) for regularized least squares,
 plus the baselines it is compared against (CG, TSQR) and the alpha-beta-gamma
 cost model used for the modeled scaling experiments."""
-from .engine import (FORMULATIONS, DualRidge, Formulation, PrimalRidge,
-                     SolveResult, SolverContracts, SolverPlan, get_solver,
-                     register_formulation, register_solver,
-                     registered_solvers, s_step_solve, s_step_solve_sharded)
+from .engine import (FORMULATIONS, BatchedSolveResult, DualRidge, Formulation,
+                     PrimalRidge, SolveResult, SolverContracts, SolverPlan,
+                     TenantBatch, get_solver, register_formulation,
+                     register_solver, registered_solvers, s_step_solve,
+                     batched_residuals,
+                     s_step_solve_batched, s_step_solve_batched_sharded,
+                     s_step_solve_sharded)
 from .bcd import bcd, ca_bcd, objective
 from .bdcd import bdcd, ca_bdcd
 from .proximal import (ProximalElasticNet, ca_proximal_bcd,
@@ -13,7 +16,8 @@ from .proximal import (ProximalElasticNet, ca_proximal_bcd,
                        proximal_bcd, proximal_bcd_reference)
 from .direct import ridge_exact
 from .distributed import (bcd_sharded, bdcd_sharded, ca_bcd_sharded,
-                          ca_bdcd_sharded, lower_solver, make_solver_mesh)
+                          ca_bdcd_sharded, lower_solver, lower_solver_batched,
+                          make_solver_mesh)
 from .hlo_analysis import (CollectiveSummary, collective_summary,
                            count_in_compiled, parse_collectives)
 from repro.kernels.gram import (PacketPlan, gram, gram_packet,
@@ -34,10 +38,11 @@ __all__ = [
     "bcd_sharded", "bdcd_sharded", "ca_bcd_sharded", "ca_bdcd_sharded",
     "lower_solver", "make_solver_mesh",
     "SolverPlan", "SolverContracts", "PacketPlan", "Formulation",
-    "PrimalRidge", "DualRidge",
+    "PrimalRidge", "DualRidge", "TenantBatch", "BatchedSolveResult",
     "ProximalElasticNet", "FORMULATIONS", "s_step_solve",
-    "s_step_solve_sharded", "get_solver", "register_formulation",
-    "register_solver", "registered_solvers",
+    "s_step_solve_sharded", "s_step_solve_batched", "batched_residuals",
+    "s_step_solve_batched_sharded", "lower_solver_batched", "get_solver",
+    "register_formulation", "register_solver", "registered_solvers",
     "proximal_bcd", "ca_proximal_bcd", "ca_proximal_bcd_sharded",
     "proximal_bcd_reference", "elastic_net_objective",
     "gram", "gram_packet", "gram_packet_sampled", "panel_apply",

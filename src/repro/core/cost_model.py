@@ -146,6 +146,75 @@ ALGORITHMS: dict[str, Callable[..., Costs]] = {
 
 
 # --------------------------------------------------------------------------
+# Batched multi-tenant solves (DESIGN.md section 8)
+# --------------------------------------------------------------------------
+# T tenant solves share ONE operand, ONE block-index stream, and therefore
+# ONE sb x sb Gram contraction and ONE psum per outer step; only the (T, sb)
+# residual directions, the T subproblem sweeps, and the T vector updates
+# scale with the tenant axis.  The sync term (alpha * L) is PER BATCH, not
+# per tenant -- that amortization is the whole point of the tenant axis, and
+# it is what the solves/s model below exposes: on latency-dominated machines
+# throughput grows ~linearly in T until the per-tenant flop/bandwidth terms
+# take over.
+
+def batched_costs(d: int, n: int, P: int, b: int, H: int, s: int = 1,
+                  tenants: int = 1, formulation: str = "primal") -> Costs:
+    """Critical-path costs of ONE T-tenant batched solve of H iterations.
+
+    Shared per outer step: the sb x sb Gram contraction and the (single)
+    all-reduce.  Per tenant per outer step: the residual direction, the s
+    small Cholesky solves, and the iterate updates -- Theorem 6/7 terms with
+    the Gram row paid once.  Wire: sb^2 + T*sb words per outer step (the
+    contract the analysis sweep machine-checks).  Memory: the shared operand
+    shard plus T iterate/target stripes.
+    """
+    if tenants < 1:
+        raise ValueError(f"tenants={tenants} must be >= 1")
+    outer = H / s
+    sb = s * b
+    c = n if formulation != "dual" else d      # local contraction length
+    gram_flops = sb * sb * c / P               # shared: ONE Y Y^T per step
+    per_tenant = (sb * c / P                               # residual panel
+                  + s * (b ** 3 / 3 + 2 * b * b) + sb * sb * s  # subproblem
+                  + sb + sb * c / P)                       # updates
+    F = outer * (gram_flops + tenants * per_tenant)
+    L = outer * 2 * _logp(P)                   # ONE fused all-reduce, any T
+    W = outer * (sb * sb + tenants * sb) * _logp(P)
+    other = d if formulation != "dual" else n  # replicated iterate length
+    M = d * n / P + sb * sb + tenants * (2 * sb + other + 2 * c / P)
+    return Costs(F, L, W, M)
+
+
+def tenant_bytes_per_iter(d: int, n: int, P: int, b: int, s: int,
+                          tenants: int, formulation: str = "primal",
+                          itemsize: int = 4) -> float:
+    """Wire bytes per ITERATION per TENANT of the batched solve.
+
+    The shared Gram part (sb^2 words per outer step) splits across all T
+    tenants, so this drops toward the ``b * logp`` floor of the per-tenant
+    residual row as T grows -- the amortization curve serve_bench records
+    next to measured solves/s.
+    """
+    c = batched_costs(d, n, P, b, s, s, tenants, formulation)
+    return c.bandwidth * itemsize / (s * tenants)
+
+
+def batched_solves_per_second(machine: MachineModel, *, d: int, n: int,
+                              P: int, b: int, H: int, s: int = 1,
+                              tenants: int = 1,
+                              formulation: str = "primal") -> float:
+    """Modeled solve throughput of the batched engine: T solves of H
+    iterations finish in ONE batched critical path, so
+
+        solves/s = T / time(batched_costs(T))
+
+    with the sync term ``alpha * L`` amortized across the tenant axis (L is
+    independent of T).  At T=1 this is exactly the single-solve rate."""
+    t = batched_costs(d, n, P, b, H, s, tenants, formulation).time(machine)
+    return tenants / t
+
+
+# --------------------------------------------------------------------------
 # Per-device HBM traffic of the Gram-packet hot path (the gather term)
 # --------------------------------------------------------------------------
 # The alpha-beta-gamma model above counts inter-device words (W); on TPU the

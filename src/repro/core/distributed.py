@@ -46,8 +46,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
 
-from .engine import (FORMULATIONS, SolverPlan, get_solver, register_solver,
-                     s_step_solve_sharded)
+from .engine import (FORMULATIONS, SolverPlan, TenantBatch, get_solver,
+                     register_solver, s_step_solve_batched,
+                     s_step_solve_batched_sharded, s_step_solve_sharded)
 
 
 def make_solver_mesh(n_devices: int | None = None, name: str = "shards") -> Mesh:
@@ -196,6 +197,62 @@ def lower_solver(solver, mesh: Mesh, d: int, n: int, lam: float, b: int, s: int,
                      tiles=tiles, **solver_kw)
 
     return jax.jit(run).lower(X, y, key).compile()
+
+
+def _batched_lowering_operands(formulation, tenants, d, n, dtype, coeff_names,
+                               mesh=None, axis="shards"):
+    """Abstract (X, ys, lams, coeffs, key) operands for a batched lowering:
+    per-tenant targets lead with the tenant axis (replicated), everything
+    else follows the formulation's single-solve layout."""
+    from jax.sharding import NamedSharding
+    form = FORMULATIONS[formulation] if isinstance(formulation, str) \
+        else formulation
+    if mesh is None:
+        X = jax.ShapeDtypeStruct((d, n), dtype)
+        ys = jax.ShapeDtypeStruct((tenants, n), dtype)
+    else:
+        xspec, yspec, _ = form.dist_in_specs(axis)
+        X = jax.ShapeDtypeStruct((d, n), dtype,
+                                 sharding=NamedSharding(mesh, xspec))
+        ys = jax.ShapeDtypeStruct(
+            (tenants, n), dtype,
+            sharding=NamedSharding(mesh, P(*((None,) + tuple(yspec)))))
+    lams = jax.ShapeDtypeStruct((tenants,), dtype)
+    coeffs = {name: jax.ShapeDtypeStruct((tenants,), dtype)
+              for name in coeff_names}
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return X, ys, lams, coeffs, key
+
+
+def lower_solver_batched(formulation, mesh: Mesh | None, d: int, n: int,
+                         tenants: int, b: int, s: int, iters: int, *,
+                         axis: str = "shards", dtype=jnp.float32,
+                         unroll: int = 1, impl: str | None = None,
+                         tiles: tuple[int, int] | None = None,
+                         coeff_names: tuple = ()):
+    """Lower+compile a BATCHED multi-tenant solve on abstract operands --
+    sharded when ``mesh`` is given, local otherwise.  The contract engine
+    lowers these at T in {1, 8, 64} to machine-check the shared-packet
+    invariant: exactly H = ceil(iters/s) all-reduces independent of T, with
+    the Gram part of the per-step payload not scaled by T.  ``coeff_names``
+    become per-tenant ``TenantBatch.coeffs`` entries (e.g. the proximal
+    ``lam1``)."""
+    formulation = _resolve_formulation(formulation) \
+        if not isinstance(formulation, str) else formulation
+    plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles, unroll=unroll,
+                      tenants=tenants)
+    X, ys, lams, coeffs, key = _batched_lowering_operands(
+        formulation, tenants, d, n, dtype, coeff_names, mesh=mesh, axis=axis)
+
+    def run(Xv, ysv, lamsv, coeffsv, keyv):
+        batch = TenantBatch(ys=ysv, lams=lamsv, coeffs=coeffsv)
+        k = jax.random.wrap_key_data(keyv)
+        if mesh is None:
+            return s_step_solve_batched(formulation, plan, Xv, batch, iters, k)
+        return s_step_solve_batched_sharded(formulation, plan, mesh, Xv,
+                                            batch, iters, k, axis=axis)
+
+    return jax.jit(run).lower(X, ys, lams, coeffs, key).compile()
 
 
 def lower_solver_local(formulation: str, d: int, n: int, lam: float, b: int,

@@ -42,9 +42,10 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from .engine import (RowMajorOperand, SolveResult, SolverContracts,
-                     SolverPlan, _BoundPrimal, _objective_from_alpha, _pad_to,
-                     _sol_err, register_formulation, register_solver,
-                     s_step_solve, s_step_solve_sharded)
+                     SolverPlan, _BoundPrimal, _fit_residual,
+                     _objective_from_alpha, _pad_to, _sol_err,
+                     register_formulation, register_solver, s_step_solve,
+                     s_step_solve_sharded)
 from .sampling import overlap_matrix
 from .subproblem import (block_forward_substitution,
                          block_forward_substitution_prox, soft_threshold)
@@ -65,15 +66,20 @@ class _BoundProximal(_BoundPrimal):
     lam1: float = 0.0
 
     def inner_sweep(self, A, base, s_k, b, flat, carry, overlap=None):
-        if not self.lam1:
+        if isinstance(self.lam1, (int, float)) and not self.lam1:
             # Static branch: lam1=0 lowers to the ridge sweep itself, which
             # is what makes the bit-for-bit equivalence with the primal
             # formulation hold (S(w + v, 0) - w == v only in exact
-            # arithmetic, not in floats).
+            # arithmetic, not in floats).  The isinstance guard keeps a
+            # TRACED lam1 -- the batched engine's per-tenant coefficient
+            # under vmap -- on the prox path (a tracer cannot pick a python
+            # branch, and the per-tenant ridge case is S(., 0), exact only
+            # up to float identity, which the batched equivalence tests pin
+            # by passing lam1 > 0 everywhere).
             return block_forward_substitution(A, base, s_k, b)
-        # diag(A) = ||x_i||^2 / n + lam in every mode: the kernel fuses reg
-        # into G's diagonal locally, and the distributed path adds reg * O
-        # (O's diagonal is 1) post-reduce.
+        # diag(A) = ||x_i||^2 / n + lam in every mode: the engine applies
+        # reg post-contraction everywhere -- reg*I locally at s_k=1 and
+        # reg * O (O's diagonal is 1) otherwise.
         tau = self.lam1 / jnp.diagonal(A)
         if overlap is None:     # engine skips O at s_k == 1 (no cross terms)
             overlap = overlap_matrix(flat).astype(A.dtype)
@@ -84,7 +90,8 @@ class _BoundProximal(_BoundPrimal):
         w, alpha = carry
         m = {"objective": _objective_from_alpha(alpha, w, self.y, self.lam)
              + self.lam1 * jnp.sum(jnp.abs(w)),
-             "nnz": jnp.sum(w != 0).astype(w.dtype)}
+             "nnz": jnp.sum(w != 0).astype(w.dtype),
+             "residual": _fit_residual(alpha, self.y)}
         if self.w_ref is not None:
             m["sol_err"] = _sol_err(w, self.w_ref)
         return m
@@ -107,7 +114,9 @@ class ProximalElasticNet:
         # Same fail-fast contract as the kernel knobs: a negative lam1 turns
         # the soft-threshold into sign(u) * (|u| + |lam1|/diag) -- an
         # inflation step that silently diverges instead of sparsifying.
-        if not self.lam1 >= 0:
+        # Only concrete numbers are checkable; an array/tracer lam1 (the
+        # batched engine's per-tenant coefficient) passes through.
+        if isinstance(self.lam1, (int, float)) and not self.lam1 >= 0:
             raise ValueError(f"lam1={self.lam1!r} must be >= 0")
 
     def contracts(self):
@@ -117,8 +126,11 @@ class ProximalElasticNet:
         # with lam1 > 0 so the prox code path (not the lam1=0 ridge branch)
         # is the one verified.  ``health_in_packet``: the guard word rides
         # the same psum (verified with guard=True lowerings).
+        # ``tenant_batched``: lam1 rides TenantBatch.coeffs as a per-tenant
+        # bound field; the packet scales are the primal's (static), so the
+        # batched engine shares the fully-scaled Gram across tenants.
         return SolverContracts(lowering_kwargs=(("lam1", 1e-3),),
-                               health_in_packet=True)
+                               health_in_packet=True, tenant_batched=True)
 
     def sample_dim(self, d, n):
         return d

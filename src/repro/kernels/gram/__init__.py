@@ -4,7 +4,7 @@ from .ops import (PacketPlan, gram, gram_packet, gram_packet_sampled,
                   normal_matvec, panel_apply, panel_matvec)
 from .ref import (gram_packet_ref, gram_packet_sampled_cols_ref,
                   gram_packet_sampled_ref, gram_ref, panel_apply_cols_ref,
-                  panel_apply_ref, panel_matvec_ref)
+                  panel_apply_ref, panel_matvec_cols_ref, panel_matvec_ref)
 from . import tuning
 
 __all__ = [
@@ -14,5 +14,5 @@ __all__ = [
     "panel_matvec", "normal_matvec", "gram_ref", "gram_packet_ref",
     "gram_packet_sampled_ref", "gram_packet_sampled_cols_ref",
     "panel_apply_ref", "panel_apply_cols_ref", "panel_matvec_ref",
-    "tuning",
+    "panel_matvec_cols_ref", "tuning",
 ]

@@ -47,7 +47,8 @@ import jax.numpy as jnp
 
 from . import ref, tuning
 from .sampled_colmajor import (LANE, gram_packet_sampled_cols_pallas,
-                               panel_apply_cols_pallas)
+                               panel_apply_cols_pallas,
+                               panel_matvec_cols_pallas)
 from .sampled_kernel import (gram_packet_sampled_pallas, panel_apply_pallas,
                              panel_matvec_pallas)
 
@@ -228,13 +229,21 @@ class ColMajorOperand:
         return out[:d]
 
     def matvec(self, flat, t, *, scale, impl, bm, bk):
-        # out(m) = scale * array[:, flat]^T t.  No solver needs the kernel
-        # route (the dual's residual rides the packet), so this is the
-        # jnp path on every impl -- XLA fuses the gather into the matvec.
-        acc = jnp.float32 if self.dtype != jnp.float64 else jnp.float64
-        out = scale * jnp.einsum("km,k->m", self.array[:, flat], t,
-                                 preferred_element_type=acc)
-        return out.astype(acc)
+        # out(m) = scale * array[:, flat]^T t.  The batched multi-tenant
+        # engine's per-tenant dual residual: each route mirrors the fused
+        # packet's r (same expression on ref, same accumulation cells in the
+        # kernel) so batched residuals match single-solve residuals bitwise.
+        if impl == "ref":
+            return ref.panel_matvec_cols_ref(self.array, flat, t, scale)
+        m = flat.shape[0]
+        bm_eff, bk_eff = self._tiles(m, bm, bk)
+        Xp = self._padded(bk_eff)
+        tp = _pad_axis(t, bk_eff, 0)
+        flat_p = _pad_axis(flat.astype(jnp.int32), bm_eff, 0)
+        out = panel_matvec_cols_pallas(Xp, flat_p, tp, scale=scale,
+                                       bm=bm_eff, bk=bk_eff,
+                                       interpret=(impl == "pallas_interpret"))
+        return out[:m]
 
 
 @dataclasses.dataclass(frozen=True)

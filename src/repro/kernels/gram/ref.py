@@ -72,6 +72,18 @@ def panel_apply_ref(X: jax.Array, flat: jax.Array, v: jax.Array,
     return out.astype(acc)
 
 
+def panel_matvec_cols_ref(X: jax.Array, flat: jax.Array, t: jax.Array,
+                          scale: float = 1.0) -> jax.Array:
+    """out(m) = scale * X[:, flat]^T t -- the dual residual direction from
+    the original layout, written as the EXACT expression of the fused
+    packet's r (``gram_packet_sampled_cols_ref``'s einsum on the transposed
+    panel) so standalone and fused residuals agree bitwise on ref."""
+    acc = jnp.float32 if X.dtype != jnp.float64 else jnp.float64
+    out = scale * jnp.einsum("ik,k->i", X[:, flat].T, t,
+                             preferred_element_type=acc)
+    return out.astype(acc)
+
+
 def panel_matvec_ref(X: jax.Array, flat: jax.Array, t: jax.Array,
                      scale: float = 1.0) -> jax.Array:
     """out(m) = scale * X[flat, :] t (the residual direction)."""

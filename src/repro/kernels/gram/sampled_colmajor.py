@@ -12,6 +12,11 @@ kernels here gather column tiles of the ORIGINAL (d, n) layout instead:
   resident copy.
 * ``panel_apply_cols_pallas``: the deferred dual update
   ``out(d) = scale * X[:, flat] @ v`` (Eq. 15/19's ``w -= Y das / (lam n)``).
+* ``panel_matvec_cols_pallas``: the standalone residual direction
+  ``out(m) = scale * X[:, flat]^T t`` -- the batched multi-tenant engine's
+  per-tenant residual, accumulated tile-for-tile like the fused packet's
+  ``r`` cells so a shared-Gram batched solve reproduces the single-solve
+  residual bitwise (DESIGN.md section 8).
 
 Gather strategy (lane-aligned column DMA): a raw column copy would move bk
 words with stride n -- 4-byte bursts the TPU DMA engines serialize.  Instead
@@ -195,6 +200,65 @@ def gram_packet_sampled_cols_pallas(X: jax.Array, flat: jax.Array,
     if symmetric_skip:
         g = mirror_lower(g, bm)
     return g, r
+
+
+def _panel_matvec_cols_kernel(idx_ref, x_ref, t_ref, o_ref, ybuf, slabs, sems,
+                              *, scale: float, bm: int, bk: int):
+    i, k = pl.program_id(0), pl.program_id(1)
+    acc = o_ref.dtype
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    _gather_cols(idx_ref, x_ref, ybuf, slabs, sems, i * bm, k, bm, bk)
+    # Same contraction cell as the fused packet's residual (j == 0 cells of
+    # _sampled_cols_packet_kernel), accumulated in the same k order, so this
+    # standalone matvec is bitwise the fused r when tiles match.
+    o_ref[...] += scale * jax.lax.dot_general(
+        ybuf[...], t_ref[...][:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=acc)[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bm", "bk", "interpret"))
+def panel_matvec_cols_pallas(X: jax.Array, flat: jax.Array, t: jax.Array, *,
+                             scale: float = 1.0, bm: int = DEFAULT_BM_COLS,
+                             bk: int = DEFAULT_BK_COLS,
+                             interpret: bool = False) -> jax.Array:
+    """out(m) = scale * X[:, flat]^T t from the original (d, n) layout -- the
+    dual residual direction as a standalone kernel.  Grid (m/bm, d/bk) with
+    the contraction (k over d) innermost so each output tile accumulates in
+    VMEM exactly like the fused packet's r tiles."""
+    d, n = X.shape
+    m = flat.shape[0]
+    if m % bm or d % bk or n % LANE:
+        raise ValueError(
+            f"flat ({m},) / X {X.shape} not tiled by bm={bm}, bk={bk}, "
+            f"LANE={LANE}")
+    acc = jnp.float64 if X.dtype == jnp.float64 else jnp.float32
+
+    kernel = functools.partial(_panel_matvec_cols_kernel, scale=scale, bm=bm,
+                               bk=bk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m // bm, d // bk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),  # X in HBM
+            pl.BlockSpec((bk,), lambda i, k, idx: (k,)),          # t tile (d)
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i, k, idx: (i,)),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bk), X.dtype),
+            pltpu.VMEM((bm, bk, LANE), X.dtype),
+            pltpu.SemaphoreType.DMA((bm,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m,), acc),
+        interpret=interpret,
+    )(flat, X, t)
 
 
 def _panel_apply_cols_kernel(idx_ref, x_ref, v_ref, o_ref, ybuf, slabs, sems,

@@ -23,7 +23,7 @@ import json
 import time
 
 from repro.core import FORMULATIONS, count_in_compiled
-from repro.core.distributed import lower_solver
+from repro.core.distributed import lower_solver, lower_solver_batched
 from repro.launch.mesh import make_production_mesh
 
 
@@ -77,6 +77,54 @@ def run(out_dir: str = "artifacts/solver", impl: str | None = None,
     return results
 
 
+def run_batched(tenants: int, out_dir: str = "artifacts/solver",
+                impl: str | None = None,
+                formulation: str = "primal") -> list[dict]:
+    """The batched multi-tenant lowering at the production mesh (DESIGN.md
+    section 8): T tenant solves, ONE psum per outer step.  Records the
+    measured collective schedule (count must equal iters/s regardless of T)
+    next to the alpha-beta-gamma model's amortized solves/s and wire
+    bytes/iter/tenant, so the dry-run artifact carries both the contract
+    and the modeled payoff of the tenant axis."""
+    from repro.core.cost_model import (TPU_V5E_ICI, batched_solves_per_second,
+                                       tenant_bytes_per_iter)
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    d, n = 4096, 1 << 22
+    b, iters = 8, 8
+    for mesh_kind in ("single", "multi"):
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        axis = tuple(mesh.axis_names)
+        for s in (1, 4, 8):
+            t0 = time.time()
+            comp = lower_solver_batched(
+                formulation, mesh, d, n, tenants, b, s, iters, axis=axis,
+                unroll=iters // s, impl=impl)
+            cs = count_in_compiled(comp)
+            rec = {
+                "mesh": mesh_kind, "chips": mesh.size, "s": s,
+                "formulation": formulation, "tenants": tenants,
+                "iters": iters, "collectives": cs.count,
+                "operand_bytes": cs.operand_bytes, "link_bytes": cs.link_bytes,
+                "modeled_solves_per_s": batched_solves_per_second(
+                    TPU_V5E_ICI, d=d, n=n, P=mesh.size, b=b, H=iters, s=s,
+                    tenants=tenants, formulation=formulation),
+                "modeled_bytes_per_iter_per_tenant": tenant_bytes_per_iter(
+                    d, n, mesh.size, b, s, tenants, formulation),
+                "compile_s": round(time.time() - t0, 1),
+            }
+            results.append(rec)
+            print(f"[solver-dryrun] batched {mesh_kind} T={tenants} s={s}: "
+                  f"{cs.count} collectives / {iters} iters, "
+                  f"{cs.operand_bytes:.2e} B wire, "
+                  f"{rec['modeled_solves_per_s']:.1f} modeled solves/s, "
+                  f"compile {rec['compile_s']}s", flush=True)
+    with open(os.path.join(out_dir,
+                           f"solver_cells_batched_T{tenants}.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    return results
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="artifacts/solver")
@@ -85,5 +133,12 @@ if __name__ == "__main__":
     ap.add_argument("--formulation", default="primal",
                     help="registry formulation to lower: primal | dual | "
                          "proximal")
+    ap.add_argument("--tenants", type=int, default=None,
+                    help="lower the BATCHED multi-tenant solve at this "
+                         "tenant-axis width instead of the single-solve cells")
     args = ap.parse_args()
-    run(args.out, impl=args.impl, formulation=args.formulation)
+    if args.tenants is not None:
+        run_batched(args.tenants, args.out, impl=args.impl,
+                    formulation=args.formulation)
+    else:
+        run(args.out, impl=args.impl, formulation=args.formulation)

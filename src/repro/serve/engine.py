@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import api, init_params
+from repro.serve.slots import SlotTable, bucket_pow2
 
 
 @dataclasses.dataclass
@@ -34,15 +35,6 @@ class ServeConfig:
     min_bucket: int = 32
 
 
-@dataclasses.dataclass
-class _Request:
-    rid: int
-    prompt: list
-    out: list
-    slot: int = -1
-    done: bool = False
-
-
 class Engine:
     def __init__(self, model_cfg, params, cfg: ServeConfig):
         self.mc = model_cfg
@@ -51,15 +43,29 @@ class Engine:
         cache_specs = api.init_cache_specs(model_cfg, cfg.slots, cfg.max_seq)
         self.cache = init_params(cache_specs, jax.random.key(0))  # zeros
         self.pos = np.zeros((cfg.slots,), np.int32)       # next write position
-        self.active = np.zeros((cfg.slots,), bool)
-        self.slot_req: list[int | None] = [None] * cfg.slots
-        self.queue: list[_Request] = []
-        self.requests: dict[int, _Request] = {}
-        self._next_rid = 0
+        self.table = SlotTable(cfg.slots)
         self._key = jax.random.key(cfg.seed)
 
         self._decode = jax.jit(self._decode_impl, donate_argnums=1)
         self._prefill_cache = {}
+
+    # Slot bookkeeping lives in the shared table; these views keep the
+    # engine's original surface (tests and the dry-run cells poke them).
+    @property
+    def active(self):
+        return self.table.active
+
+    @property
+    def slot_req(self):
+        return self.table.slot_req
+
+    @property
+    def queue(self):
+        return self.table.queue
+
+    @property
+    def requests(self):
+        return self.table.requests
 
     # ------------------------------------------------------------ public --
     def add_request(self, prompt_tokens) -> int:
@@ -74,12 +80,7 @@ class Engine:
                     f"{self.mc.name}: prompt length {len(prompt_tokens)} must "
                     f"be a multiple of the SSD chunk ({chunk}) -- align or "
                     f"truncate the prompt (chunked-prefill constraint)")
-        rid = self._next_rid
-        self._next_rid += 1
-        req = _Request(rid, prompt_tokens, [])
-        self.queue.append(req)
-        self.requests[rid] = req
-        return rid
+        return self.table.submit(prompt_tokens)
 
     def step(self) -> dict[int, int]:
         """Admit queued requests, decode one token for all active slots.
@@ -88,21 +89,18 @@ class Engine:
         if not self.active.any():
             return {}
         tok = np.zeros((self.cfg.slots,), np.int32)
-        for s in range(self.cfg.slots):
-            if self.active[s]:
-                req = self.requests[self.slot_req[s]]
-                tok[s] = (req.out[-1] if req.out else req.prompt[-1])
+        for s in self.table.active_slots():
+            req = self.table.request_in(s)
+            tok[s] = (req.out[-1] if req.out else req.payload[-1])
         self._key, k = jax.random.split(self._key)
         logits, self.cache, sampled = self._decode(
             self.params, self.cache, jnp.asarray(tok),
             jnp.asarray(self.pos), k)
         sampled = np.asarray(sampled)
         out = {}
-        for s in range(self.cfg.slots):
-            if not self.active[s]:
-                continue
+        for s in self.table.active_slots():
             t = int(sampled[s])
-            req = self.requests[self.slot_req[s]]
+            req = self.table.request_in(s)
             req.out.append(t)
             out[req.rid] = t
             self.pos[s] += 1
@@ -136,12 +134,6 @@ class Engine:
             sampled = jnp.argmax(logits, axis=-1)
         return logits, cache, sampled.astype(jnp.int32)
 
-    def _bucket(self, n: int) -> int:
-        b = self.cfg.min_bucket
-        while b < n:
-            b *= 2
-        return min(b, self.cfg.max_seq)
-
     def _prefill_fn(self, bucket: int):
         if bucket not in self._prefill_cache:
             def fn(params, tokens, last_pos):
@@ -153,17 +145,15 @@ class Engine:
         return self._prefill_cache[bucket]
 
     def _admit(self) -> None:
-        for s in range(self.cfg.slots):
-            if self.active[s] or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            plen = len(req.prompt)
+        for req in self.table.admit():
+            s = req.slot
+            plen = len(req.payload)
             # ssm/hybrid: exact (chunk-aligned) prefill; attention: padded
             # power-of-two bucket (padding is attention-mask safe).
             bucket = plen if self.mc.family in ("ssm", "hybrid") \
-                else self._bucket(plen)
+                else bucket_pow2(plen, self.cfg.min_bucket, self.cfg.max_seq)
             toks = np.zeros((1, bucket), np.int32)
-            toks[0, :plen] = req.prompt[:bucket]
+            toks[0, :plen] = req.payload[:bucket]
             logits, cache1 = self._prefill_fn(bucket)(
                 self.params, jnp.asarray(toks), jnp.asarray([plen - 1]))
             # copy the single-request cache stripe into slot s (axis 1:
@@ -175,18 +165,11 @@ class Engine:
             # *real* prompt position: with right padding that is plen-1 ==
             # bucket-1 only when plen == bucket, so decode re-scores from the
             # last prompt token instead of trusting padded prefill logits.
-            req.slot = s
-            self.slot_req[s] = req.rid
             self.pos[s] = plen - 1
-            self.active[s] = True
             # replay the last prompt token through decode to get clean logits
             # at position plen-1 (also refreshes that cache row).
             req.out = []
 
     def _retire(self, slot: int) -> None:
-        rid = self.slot_req[slot]
-        if rid is not None:
-            self.requests[rid].done = True
-        self.active[slot] = False
-        self.slot_req[slot] = None
+        self.table.retire(slot)
         self.pos[slot] = 0

@@ -45,8 +45,8 @@ def check_sweep_pass():
     report = run_sweep()
     assert report.ok, "\n" + report.summary()
     hlo = next(p for p in report.passes if p.name == "hlo")
-    # 3 formulations x (4 local + 8 sharded + 1 x64 + 6 guard) cases
-    assert len(hlo.cases) == 57, hlo.cases
+    # 3 formulations x (4 local + 8 sharded + 1 x64 + 6 guard + 4 batched)
+    assert len(hlo.cases) == 69, hlo.cases
     assert not hlo.skipped, hlo.skipped
     plan = next(p for p in report.passes if p.name == "plan")
     assert len(plan.cases) >= 11, plan.cases

@@ -171,6 +171,42 @@ def check_collective_counts_pallas():
     print("collective_counts_pallas OK")
 
 
+def check_batched_collectives():
+    """DESIGN.md section 8 on the wire: a T-tenant batched sharded solve
+    emits exactly H = ceil(iters/s) all-reduces INDEPENDENT of T, and the
+    per-step payload is sb^2 + T*sb words -- the shared Gram packet is not
+    scaled by the tenant axis, only the (T, sb) residual directions are."""
+    from repro.analysis import expect_collectives
+    from repro.core import collective_summary, make_solver_mesh
+    from repro.core.distributed import lower_solver_batched
+    mesh = make_solver_mesh(8)
+    d, n, b, s = 64, 256, 4, 2
+    word = 8                                     # x64 subprocess: f64 wire
+    for iters in (4, 3):                         # even and ragged tails
+        H = iters // s + (1 if iters % s else 0)
+        payload = {}
+        for tenants in (1, 8, 64):
+            comp = lower_solver_batched(
+                "primal", mesh, d, n, tenants, b, s, iters,
+                unroll=max(iters // s, 1), dtype=jnp.float64)
+            expect_collectives(comp, H,
+                               subject=f"batched[T={tenants},iters={iters}]")
+            payload[tenants] = collective_summary(comp.as_text()).operand_bytes
+        for tenants in (8, 64):
+            # per-step payload sb_k^2 + T*sb_k with sb_k = s*b on full steps
+            # and rem*b on the ragged tail, so the T-scaled part sums to
+            # exactly iters*b words per solve -- the Gram part cancels.
+            want = payload[1] + (tenants - 1) * word * iters * b
+            assert payload[tenants] == want, (
+                f"T={tenants} iters={iters}: wire {payload[tenants]} != "
+                f"{want} (Gram part must not scale with T)")
+    # the dual's per-tenant Gram scale moves post-reduce: same law holds
+    comp = lower_solver_batched("dual", mesh, 256, 64, 16, b, s, 4,
+                                unroll=2, dtype=jnp.float64)
+    expect_collectives(comp, 2, subject="batched dual[T=16]")
+    print("batched_collectives OK")
+
+
 def check_flash_decode():
     """Sequence-sharded flash-decoding == dense decode attention."""
     from repro import compat
@@ -226,8 +262,8 @@ def check_elastic_reshard():
 
 CHECKS = {f.__name__.replace("check_", ""): f for f in
           (check_solver_equivalence, check_collective_counts,
-           check_collective_counts_pallas, check_flash_decode,
-           check_elastic_reshard)}
+           check_collective_counts_pallas, check_batched_collectives,
+           check_flash_decode, check_elastic_reshard)}
 
 if __name__ == "__main__":
     CHECKS[sys.argv[1]]()

@@ -1,0 +1,199 @@
+"""Batched multi-tenant engine: T-tenant solves == T independent solves.
+
+DESIGN.md section 8's equivalence claim, pinned as tests:
+
+* bit-for-bit on ``pallas_interpret`` with pinned kernel tiles (the regime
+  where the shared RAW packet + per-tenant ``_assemble_subproblem`` keeps
+  both drivers' expression graphs -- and their LLVM fma contraction --
+  identical), even and ragged iteration counts, mixed per-tenant lam, and
+  per-tenant proximal ``lam1`` coefficients;
+* <= 1e-12 relative on the f64 ref backend;
+* a retired-early tenant's carry is FROZEN (masked updates are exact no-ops)
+  while its neighbors keep matching their single solves bit-for-bit;
+* the continuous-batching front end (``serve.solver_service``) lands every
+  request on the single-solve answer through admits/chunks/retirement.
+
+Bitwise tests pin ``tiles`` explicitly: the equivalence holds per kernel
+launch geometry, and autotuned picks may differ across hosts.  Proximal
+tenants use ``lam1 > 0`` everywhere -- at traced ``lam1 = 0`` the prox path
+is not the ridge branch the single driver statically selects (documented
+contract on ``_BoundProximal``).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _x64 import x64_mode  # noqa: F401  (autouse fixture)
+from repro.core import (ProximalElasticNet, SolverPlan, TenantBatch,
+                        ridge_exact, s_step_solve, s_step_solve_batched,
+                        sample_blocks)
+from repro.core.engine import _resolve_form
+
+D, N, T, B, S = 24, 40, 3, 4, 3
+LAMS = (0.1, 0.5, 1.0)          # mixed per-tenant l2 weights
+LAM1S = (0.02, 0.01, 0.05)      # per-tenant proximal l1 weights (> 0)
+
+
+def _problem(dtype):
+    kX, kY = jax.random.split(jax.random.PRNGKey(0))
+    X = jax.random.normal(kX, (D, N), dtype)
+    ys = jax.random.normal(kY, (T, N), dtype)
+    return X, ys
+
+
+def _single(form_name, t, plan, X, ys, iters, idx):
+    f = ProximalElasticNet(lam1=LAM1S[t]) if form_name == "proximal" \
+        else form_name
+    return s_step_solve(f, plan, X, ys[t], LAMS[t], iters, idx=idx)
+
+
+def _batch(form_name, X, ys, tol=None):
+    coeffs = {}
+    if form_name == "proximal":
+        coeffs = {"lam1": jnp.asarray(LAM1S, ys.dtype)}
+    return TenantBatch(ys=ys, lams=jnp.asarray(LAMS, ys.dtype),
+                       coeffs=coeffs, tol=tol)
+
+
+@pytest.mark.parametrize("form_name", ["primal", "dual", "proximal"])
+@pytest.mark.parametrize("iters", [6, 5])       # 6 = 2 full steps, 5 = ragged
+def test_batched_matches_singles_bitwise(form_name, iters):
+    """One scan, one packet, T tenants -- every iterate equal under ``==``
+    to its independent single solve on the interpret kernel backend."""
+    X, ys = _problem(jnp.float32)
+    plan = SolverPlan(b=B, s=S, impl="pallas_interpret", tiles=(8, 256))
+    form = _resolve_form(form_name)
+    idx = sample_blocks(jax.random.PRNGKey(7), form.sample_dim(D, N), B,
+                        iters)
+    res = s_step_solve_batched(form_name, plan, X, _batch(form_name, X, ys),
+                               iters, idx=idx)
+    for t in range(T):
+        r = _single(form_name, t, plan, X, ys, iters, idx)
+        np.testing.assert_array_equal(np.asarray(res.ws[t]), np.asarray(r.w))
+        np.testing.assert_array_equal(np.asarray(res.alphas[t]),
+                                      np.asarray(r.alpha))
+
+
+@pytest.mark.parametrize("form_name", ["primal", "dual", "proximal"])
+def test_batched_matches_singles_ref_f64(form_name):
+    """f64 ref backend: <= 1e-12 relative against the T single solves
+    (ragged iteration count, mixed lams)."""
+    X, ys = _problem(jnp.float64)
+    plan = SolverPlan(b=B, s=S, impl="ref")
+    form = _resolve_form(form_name)
+    iters = 7
+    idx = sample_blocks(jax.random.PRNGKey(9), form.sample_dim(D, N), B,
+                        iters)
+    res = s_step_solve_batched(form_name, plan, X, _batch(form_name, X, ys),
+                               iters, idx=idx)
+    for t in range(T):
+        r = _single(form_name, t, plan, X, ys, iters, idx)
+        np.testing.assert_allclose(np.asarray(res.ws[t]), np.asarray(r.w),
+                                   rtol=1e-12, atol=1e-14)
+        np.testing.assert_allclose(np.asarray(res.alphas[t]),
+                                   np.asarray(r.alpha),
+                                   rtol=1e-12, atol=1e-14)
+
+
+def test_inactive_tenant_frozen_neighbors_bitwise():
+    """An ``active0``-masked tenant's carry never moves (exact zeros ride
+    the masked update), while live tenants still match their singles."""
+    X, ys = _problem(jnp.float32)
+    plan = SolverPlan(b=B, s=S, impl="pallas_interpret", tiles=(8, 256))
+    iters = 6
+    idx = sample_blocks(jax.random.PRNGKey(3), D, B, iters)
+    active0 = jnp.asarray([True, False, True])
+    res = s_step_solve_batched("primal", plan, X, _batch("primal", X, ys),
+                               iters, idx=idx, active0=active0)
+    # frozen tenant: still the cold-start carry, bit-for-bit
+    np.testing.assert_array_equal(np.asarray(res.ws[1]), np.zeros(D))
+    np.testing.assert_array_equal(np.asarray(res.alphas[1]), np.zeros(N))
+    assert not bool(res.active[1])
+    for t in (0, 2):
+        r = _single("primal", t, plan, X, ys, iters, idx)
+        np.testing.assert_array_equal(np.asarray(res.ws[t]), np.asarray(r.w))
+        assert bool(res.active[t])
+
+
+def test_tol_retirement_freezes_carry():
+    """With ``tol`` loose enough that every tenant retires after the FIRST
+    outer step, a longer solve returns exactly the one-outer-step iterates:
+    retired tenants' remaining updates are masked to no-ops."""
+    X, ys = _problem(jnp.float32)
+    plan = SolverPlan(b=B, s=S, impl="pallas_interpret", tiles=(8, 256))
+    idx = sample_blocks(jax.random.PRNGKey(5), D, B, 9)
+    long = s_step_solve_batched("primal", plan, X,
+                                _batch("primal", X, ys, tol=10.0), 9, idx=idx)
+    short = s_step_solve_batched("primal", plan, X, _batch("primal", X, ys),
+                                 S, idx=idx[:S])
+    assert not bool(long.active.any())
+    np.testing.assert_array_equal(np.asarray(long.ws), np.asarray(short.ws))
+    np.testing.assert_array_equal(np.asarray(long.alphas),
+                                  np.asarray(short.alphas))
+
+
+def test_warm_resume_bitwise():
+    """carry0/active0 chunked resume == one uninterrupted solve: the serve
+    front end's chunking must not perturb iterates."""
+    X, ys = _problem(jnp.float32)
+    plan = SolverPlan(b=B, s=S, impl="pallas_interpret", tiles=(8, 256))
+    iters = 12
+    idx = sample_blocks(jax.random.PRNGKey(11), D, B, iters)
+    whole = s_step_solve_batched("primal", plan, X, _batch("primal", X, ys),
+                                 iters, idx=idx)
+    half = s_step_solve_batched("primal", plan, X, _batch("primal", X, ys),
+                                6, idx=idx[:6])
+    resumed = s_step_solve_batched(
+        "primal", plan, X, _batch("primal", X, ys), 6, idx=idx[6:],
+        carry0=(half.ws, half.alphas), active0=half.active)
+    np.testing.assert_array_equal(np.asarray(resumed.ws),
+                                  np.asarray(whole.ws))
+    np.testing.assert_array_equal(np.asarray(resumed.alphas),
+                                  np.asarray(whole.alphas))
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching front end
+# ---------------------------------------------------------------------------
+
+def test_solver_service_converges_to_exact():
+    """Requests stream through slots/chunks/retirement and land on the
+    closed-form ridge solution."""
+    from repro.serve.solver_service import SolverService, SolverServiceConfig
+    X, ys = _problem(jnp.float32)
+    svc = SolverService(X, SolverPlan(b=B, s=S, impl="ref"), "primal",
+                        SolverServiceConfig(slots=4, min_bucket=2,
+                                            chunk_iters=48, max_iters=480))
+    rids = [svc.submit(np.asarray(ys[t]), LAMS[t]) for t in range(T)]
+    done = svc.serve()
+    assert sorted(done) == sorted(rids)
+    for t, rid in enumerate(rids):
+        ticket = svc.result(rid)
+        assert ticket.iters == 480 and not ticket.converged
+        w_exact = np.asarray(ridge_exact(X, ys[t], LAMS[t]))
+        err = np.linalg.norm(ticket.w - w_exact) / np.linalg.norm(w_exact)
+        assert err < 1e-4, (t, err)
+
+
+def test_solver_service_tol_retirement_oversubscribed():
+    """More requests than slots; the dual's residual IS a convergence
+    statistic, so per-request tolerances retire tenants early and free
+    slots for the queue."""
+    from repro.serve.solver_service import SolverService, SolverServiceConfig
+    X, _ = _problem(jnp.float32)
+    svc = SolverService(X, SolverPlan(b=B, s=S, impl="ref"), "dual",
+                        SolverServiceConfig(slots=2, min_bucket=2,
+                                            chunk_iters=64, max_iters=1280))
+    rids = [svc.submit(
+        np.asarray(jax.random.normal(jax.random.PRNGKey(20 + i), (N,),
+                                     jnp.float32)),
+        0.3 + 0.2 * i, tol=1e-4) for i in range(4)]
+    done = svc.serve()
+    assert sorted(done) == sorted(rids)
+    for rid in rids:
+        t = svc.result(rid)
+        assert t.converged and t.residual <= 1e-4
+    # 4 requests through 2 slots: one compiled shape total
+    assert list(svc._solve_cache) == [(2, "dual", ())]

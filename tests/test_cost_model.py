@@ -1,8 +1,10 @@
 """Cost-model (Table 1/2, Fig 8/9) verification: the structural claims of the
 paper hold in our alpha-beta-gamma implementation."""
 
-from repro.core.cost_model import (CORI_MPI, CORI_SPARK, bcd_costs, bdcd_costs,
-                                   best_s, cg_costs, strong_scaling,
+from repro.core.cost_model import (CORI_MPI, CORI_SPARK, batched_costs,
+                                   batched_solves_per_second, bcd_costs,
+                                   bdcd_costs, best_s, cg_costs,
+                                   strong_scaling, tenant_bytes_per_iter,
                                    tsqr_costs, weak_scaling)
 
 D, N, P, B, H = 1024, 2 ** 22, 1024, 4, 1000
@@ -70,6 +72,33 @@ def test_fig9_weak_scaling_speedups():
 
 def test_table2_tsqr_single_reduction():
     assert tsqr_costs(D, N, P).latency < cg_costs(D, N, P, 100).latency
+
+
+def test_batched_sync_term_independent_of_tenants():
+    """DESIGN.md section 8: the latency term is per BATCH -- T tenants, one
+    psum -- while bandwidth picks up exactly T*sb extra words per step."""
+    c1 = batched_costs(D, N, P, B, H, s=8, tenants=1)
+    c64 = batched_costs(D, N, P, B, H, s=8, tenants=64)
+    assert c1.latency == c64.latency
+    sb = 8 * B
+    from repro.core.cost_model import _logp
+    assert abs((c64.bandwidth - c1.bandwidth)
+               - (H / 8) * 63 * sb * _logp(P)) < 1e-6
+    # T=1 reduces to the single-solve Theorem 6 costs
+    s1 = bcd_costs(D, N, P, B, H, s=8)
+    assert abs(c1.flops / s1.flops - 1) < 1e-9
+    assert c1.latency == s1.latency
+
+
+def test_batched_amortization_curves():
+    """Latency-dominated machine: solves/s grows ~linearly with T; wire
+    bytes per iteration per tenant fall toward the per-tenant floor."""
+    kw = dict(d=D, n=N, P=P, b=B, H=H, s=8)
+    r1 = batched_solves_per_second(CORI_SPARK, tenants=1, **kw)
+    r64 = batched_solves_per_second(CORI_SPARK, tenants=64, **kw)
+    assert r64 / r1 > 10      # the serve-bench acceptance line, modeled
+    assert (tenant_bytes_per_iter(D, N, P, B, 8, 64)
+            < tenant_bytes_per_iter(D, N, P, B, 8, 1) / 10)
 
 
 def test_costs_positive():

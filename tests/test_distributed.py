@@ -37,6 +37,13 @@ def test_collective_count_pallas_lowering():
     _run("collective_counts_pallas")
 
 
+def test_batched_collectives_independent_of_tenants():
+    """T-tenant batched lowering: exactly H = ceil(iters/s) all-reduces at
+    T in {1, 8, 64}, per-step payload sb^2 + T*sb words (shared Gram not
+    scaled by T)."""
+    _run("batched_collectives")
+
+
 def test_flash_decode_seqsharded():
     _run("flash_decode")
 
