@@ -1,4 +1,4 @@
-.PHONY: test test-all test-fast bench bench-smoke bench-serve-smoke check-contracts check-faults
+.PHONY: test test-all test-fast bench bench-smoke bench-serve-smoke check-contracts check-faults check-pipeline
 
 # Tier-1 verify (ROADMAP.md): the full suite, fail-fast.
 test:
@@ -42,3 +42,15 @@ check-contracts:
 # CI `faults` job.
 check-faults:
 	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m pytest -x -q -m "not slow" tests/test_faults.py tests/test_checkpoint.py
+
+# Pipelined wire schedule (DESIGN.md section 9): ring == psum equivalence for
+# every registered formulation (single + batched, even + ragged), the
+# declared collective-permute schedule machine-counted, the evil-extra-hop
+# mutation caught, fault parity with the psum backend, and the accelerated
+# formulation's beta=0 bit-for-bit gate.  Mirrors the CI `pipeline` job.
+check-pipeline:
+	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m pytest -x -q \
+		tests/test_distributed.py::test_pipelined_wire_schedule \
+		tests/test_analysis.py::test_mutation_extra_hop_caught \
+		tests/test_faults.py::test_pipelined_fault_parity \
+		tests/test_accelerated.py

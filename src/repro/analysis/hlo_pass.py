@@ -30,6 +30,15 @@ formulation DECLARES via its ``contracts()`` hook
   word rides the packet psum instead of adding a reduction (the PR-7
   zero-extra-collectives guarantee; 2 extra local + 4 extra sharded ref
   cases per formulation).
+* pipelined wire schedule: the ``"pipelined"`` backend's ring decomposition
+  lowers to exactly ``H * ring_hops(mesh)`` collectives of the DECLARED
+  ``pipelined_collective_kinds`` (collective-permute) and zero of anything
+  else -- in particular zero all-reduces: the monolithic psum is fully
+  replaced, not augmented.  The hop count comes from the contract's
+  ``pipelined_hops`` affine law ``sum_i (a*P_i + c)``, not a hand-edited
+  constant, and the guard-armed and tenant-batched lowerings must obey the
+  SAME budget (health word and tenant payload ride the decomposed
+  reduction).
 
 Sweep shapes are chosen so the shapes the checks key on are PAIRWISE
 DISTINCT (sb=8, d/P=16, n/P=32, d=16P, n=32P): a square sb x sb transpose
@@ -293,4 +302,64 @@ def run_hlo_pass(formulations=None) -> PassReport:
                         "f64-packet", case,
                         f"x64 lowering reduces in {sorted(dts)}, expected "
                         "all collectives to carry f64"))
+
+        # ---- pipelined backend: H * ring_hops declared-kind collectives ---
+        if "pipelined" in backends.get(name, ()):
+            if mesh is None:
+                rep.skip(f"{name}/pipelined", "needs >= 2 devices")
+                continue
+            import dataclasses
+
+            from repro.core.distributed import lower_solver_batched
+            from repro.core.engine import ring_hops
+
+            # The schedule the backend DECLARES: collective-permute hops,
+            # counted by the contract's affine law over the mesh axis sizes.
+            ring_contract = dataclasses.replace(
+                contract,
+                collective_kinds=contract.pipelined_collective_kinds)
+            hops = ring_hops(tuple(mesh.shape.values()),
+                             law=contract.pipelined_hops)
+            for impl in IMPLS:
+                for iters in (ITERS_EVEN, ITERS_RAGGED):
+                    case = rep.case(
+                        f"{name}/pipelined[impl={impl},iters={iters}]")
+                    compiled = lower_solver(
+                        name, mesh, d, n, lam, B, S, iters, impl=impl,
+                        unroll=max(iters // S, 1), backend="pipelined", **kw)
+                    txt = compiled.as_text()
+                    H = _outer_count(iters, S)
+                    _check_collectives(txt, ring_contract, hops * H, case,
+                                       rep.violations)
+                    if contract.operand_transpose_free:
+                        _check_no_transpose(txt, op_shape, case,
+                                            rep.violations)
+                    if impl in contract.panel_free_impls:
+                        _check_panel_free(txt, sb, contraction, case,
+                                          rep.violations)
+            if contract.health_in_packet:
+                # health word rides the decomposed reduction: same budget
+                for iters in (ITERS_EVEN, ITERS_RAGGED):
+                    case = rep.case(
+                        f"{name}/pipelined[impl=ref,iters={iters},guard]")
+                    compiled = lower_solver(
+                        name, mesh, d, n, lam, B, S, iters, impl="ref",
+                        unroll=max(iters // S, 1), guard=True,
+                        backend="pipelined", **kw)
+                    H = _outer_count(iters, S)
+                    _check_collectives(compiled.as_text(), ring_contract,
+                                       hops * H, case, rep.violations)
+            if contract.tenant_batched:
+                # tenant payload rides the decomposed reduction: same budget
+                coeff_names = tuple(k for k, _ in contract.lowering_kwargs)
+                for iters in (ITERS_EVEN, ITERS_RAGGED):
+                    case = rep.case(
+                        f"{name}/pipelined-batched[T=8,iters={iters}]")
+                    compiled = lower_solver_batched(
+                        name, mesh, d, n, 8, B, S, iters,
+                        unroll=max(iters // S, 1), coeff_names=coeff_names,
+                        wire="ring")
+                    H = _outer_count(iters, S)
+                    _check_collectives(compiled.as_text(), ring_contract,
+                                       hops * H, case, rep.violations)
     return rep

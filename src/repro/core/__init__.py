@@ -12,11 +12,16 @@ from .engine import (FORMULATIONS, BatchedSolveResult, DualRidge, Formulation,
 from .bcd import bcd, ca_bcd, objective
 from .bdcd import bdcd, ca_bdcd
 from .proximal import (ProximalElasticNet, ca_proximal_bcd,
-                       ca_proximal_bcd_sharded, elastic_net_objective,
-                       proximal_bcd, proximal_bcd_reference)
+                       ca_proximal_bcd_pipelined, ca_proximal_bcd_sharded,
+                       elastic_net_objective, proximal_bcd,
+                       proximal_bcd_reference)
+from .accelerated import (MomentumWrapper, accelerated_bcd,
+                          ca_accelerated_bcd, ca_accelerated_bcd_pipelined,
+                          ca_accelerated_bcd_sharded)
 from .direct import ridge_exact
-from .distributed import (bcd_sharded, bdcd_sharded, ca_bcd_sharded,
-                          ca_bdcd_sharded, lower_solver, lower_solver_batched,
+from .distributed import (bcd_sharded, bdcd_sharded, ca_bcd_pipelined,
+                          ca_bcd_sharded, ca_bdcd_pipelined, ca_bdcd_sharded,
+                          lower_solver, lower_solver_batched,
                           make_solver_mesh)
 from .hlo_analysis import (CollectiveSummary, collective_summary,
                            count_in_compiled, parse_collectives)
@@ -36,7 +41,8 @@ __all__ = [
     "ridge_exact", "cg_ridge", "cg_ridge_history", "tsqr", "tsqr_ridge",
     "cholqr_r",
     "bcd_sharded", "bdcd_sharded", "ca_bcd_sharded", "ca_bdcd_sharded",
-    "lower_solver", "make_solver_mesh",
+    "ca_bcd_pipelined", "ca_bdcd_pipelined", "lower_solver",
+    "make_solver_mesh",
     "SolverPlan", "SolverContracts", "PacketPlan", "Formulation",
     "PrimalRidge", "DualRidge", "TenantBatch", "BatchedSolveResult",
     "ProximalElasticNet", "FORMULATIONS", "s_step_solve",
@@ -44,7 +50,10 @@ __all__ = [
     "s_step_solve_batched_sharded", "lower_solver_batched", "get_solver",
     "register_formulation", "register_solver", "registered_solvers",
     "proximal_bcd", "ca_proximal_bcd", "ca_proximal_bcd_sharded",
+    "ca_proximal_bcd_pipelined",
     "proximal_bcd_reference", "elastic_net_objective",
+    "MomentumWrapper", "accelerated_bcd", "ca_accelerated_bcd",
+    "ca_accelerated_bcd_sharded", "ca_accelerated_bcd_pipelined",
     "gram", "gram_packet", "gram_packet_sampled", "panel_apply",
     "panel_matvec", "normal_matvec",
     "sample_blocks", "sample_blocks_balanced", "overlap_matrix",

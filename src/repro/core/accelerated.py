@@ -1,0 +1,228 @@
+"""Accelerated (momentum) CA-BCD -- the fourth Formulation.
+
+Communication-efficient primal-dual work (Devarakonda et al.,
+arXiv:1711.05305) shows the s-step packet can also carry acceleration
+state: the deferred block updates the engine already applies are exactly
+the increments a momentum recurrence needs, so the iteration count drops
+with ZERO change to the wire.  :class:`MomentumWrapper` wraps the primal
+ridge hooks with a per-coordinate velocity
+
+    v[i] <- beta * v[i] + dw[i]        (the engine's ridge block step dw)
+    w[i] <- w[i] + v[i],   alpha <- alpha + Y_i^T v[i]
+
+kept in the scan carry next to ``(w, alpha)`` -- replicated like w in the
+distributed layout, so the momentum term adds ZERO extra collectives: the
+packet, its single reduction (psum or the pipelined ring wire), and the
+health word are byte-identical to the primal's.  ``beta = 0`` IS the
+classical primal update bit-for-bit (static branch, the proximal
+``lam1 = 0`` idiom -- no momentum code in the lowering), which is how the
+classical rate is recovered and how the equivalence tests pin the wrapper.
+At ``s = 1`` the schedule is exactly classical heavy-ball BCD; at ``s > 1``
+the velocity reshapes the deferred updates only (see
+:func:`ca_accelerated_bcd` on the CoCoA-style semantics).
+
+The per-block inner subproblems are untouched (same Gram packet, same
+block forward substitution); only the APPLIED step is reshaped, which is
+precisely the ``update`` hook's contract.  Like every formulation the
+engine runs, ``s = 1`` is the classical momentum schedule and
+``iters % s != 0`` runs a ragged tail.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .engine import (RowMajorOperand, SolveResult, SolverContracts,
+                     SolverPlan, _BoundPrimal, _pad_to, panel_apply,
+                     register_formulation, register_solver, s_step_solve,
+                     s_step_solve_sharded)
+
+
+@dataclasses.dataclass(frozen=True)
+class _BoundAccelerated(_BoundPrimal):
+    """Primal hooks + the velocity carry.  The packet side (operand, scales,
+    packet_vector, base, inner_sweep) is the primal ridge's untouched --
+    ``packet_vector``/``base`` already index the carry positionally, so the
+    widened ``(w, alpha, v)`` carry flows through them unchanged.  Only
+    ``init_carry`` (adds v), ``update`` (applies the momentum step) and
+    ``metrics`` (drops v) differ."""
+    beta: float = 0.0
+
+    def init_carry(self, axes=None):
+        w, alpha = _BoundPrimal.init_carry(self, axes=axes)
+        # v matches w's layout exactly (replicated in the distributed mode);
+        # a warm restart re-enters with zero velocity -- momentum state is
+        # deliberately NOT checkpoint state (DESIGN.md section 7).
+        return w, alpha, jnp.zeros_like(w)
+
+    def update(self, carry, idx, dx, pp):
+        w, alpha, v = carry
+        if isinstance(self.beta, (int, float)) and not self.beta:
+            # Static branch: beta=0 lowers to the primal update itself,
+            # which is what makes the bit-for-bit classical equivalence
+            # hold (beta*v + dx == dx only in exact arithmetic once v has
+            # rounded state; here v stays exactly zero and the op sequence
+            # is the primal's).
+            w, alpha = _BoundPrimal.update(self, (w, alpha), idx, dx, pp)
+            return w, alpha, v
+        vi = self.beta * v[idx] + dx
+        v = v.at[idx].set(vi)
+        w = w.at[idx].add(vi)
+        alpha = alpha + panel_apply(self.operand, idx, vi, plan=pp)
+        return w, alpha, v
+
+    def metrics(self, carry):
+        return _BoundPrimal.metrics(self, (carry[0], carry[1]))
+
+
+@dataclasses.dataclass(frozen=True)
+class MomentumWrapper:
+    """Accelerated CA-BCD: samples features like the primal, 1D-block-column
+    layout.  ``beta`` is formulation state (the proximal ``lam1`` pattern) so
+    the engine signatures stay untouched: the wrappers below build
+    ``MomentumWrapper(beta=...)`` per call, and the registry's default
+    instance is what layout resolution sees."""
+    beta: float = 0.9
+    name: ClassVar[str] = "accelerated"
+    operand_layout: ClassVar[str] = "rows"
+
+    def __post_init__(self):
+        # Fail fast on a non-contractive momentum weight; only concrete
+        # numbers are checkable (a tracer passes through).
+        if isinstance(self.beta, (int, float)) and not 0.0 <= self.beta < 1.0:
+            raise ValueError(f"beta={self.beta!r} must be in [0, 1)")
+
+    def contracts(self):
+        # The velocity is carry state on the replicated iterate: same wire
+        # as the primal ridge on BOTH schedules (one packet all-reduce per
+        # outer iteration, or the pipelined ring decomposition), health word
+        # riding it, zero extra collectives.  ``lowering_kwargs`` makes the
+        # analysis engine lower with beta > 0 so the momentum path (not the
+        # beta=0 primal branch) is the one verified.  Not tenant-batched:
+        # the batched engine's carry is pinned to (ws, alphas) pairs.
+        return SolverContracts(lowering_kwargs=(("beta", 0.5),),
+                               health_in_packet=True, tenant_batched=False)
+
+    def sample_dim(self, d, n):
+        return d
+
+    def bind(self, X, y, lam, *, x0=None, w_ref=None):
+        d, n = X.shape
+        return _BoundAccelerated(operand=RowMajorOperand(X), y=y, lam=lam,
+                                 n=n, d=d, w0=x0, w_ref=w_ref, beta=self.beta)
+
+    def pad_shards(self, X, y, n_shards):
+        return _pad_to(X, n_shards, 1), _pad_to(y, n_shards, 0)
+
+    def bind_shard(self, Xl, yl, lam, *, d, n, x0=None):
+        return _BoundAccelerated(operand=RowMajorOperand(Xl), y=yl, lam=lam,
+                                 n=n, d=d, w0=x0, beta=self.beta)
+
+    def dist_in_specs(self, axis):
+        return P(None, axis), P(axis), P(None)
+
+    def dist_out_specs(self, axis):
+        # (w, alpha, v): the velocity is replicated like w.
+        return P(None), P(axis), P(None)
+
+    def dist_finalize(self, w, alpha, d, n):
+        return w, alpha[:n]
+
+
+def accelerated_bcd(X: jax.Array, y: jax.Array, lam: float, b: int,
+                    iters: int, key: jax.Array, *, beta: float = 0.9,
+                    w0: jax.Array | None = None, idx: jax.Array | None = None,
+                    w_ref: jax.Array | None = None, impl: str | None = None,
+                    tiles: tuple[int, int] | None = None) -> SolveResult:
+    """Classical momentum BCD: the s-step engine at s=1.  ``beta=0`` IS
+    :func:`~repro.core.bcd`."""
+    plan = SolverPlan(b=b, s=1, impl=impl, tiles=tiles)
+    return s_step_solve(MomentumWrapper(beta=beta), plan, X, y, lam, iters,
+                        key, x0=w0, idx=idx, w_ref=w_ref)
+
+
+def ca_accelerated_bcd(X: jax.Array, y: jax.Array, lam: float, b: int, s: int,
+                       iters: int, key: jax.Array, *, beta: float = 0.9,
+                       w0: jax.Array | None = None,
+                       idx: jax.Array | None = None,
+                       w_ref: jax.Array | None = None,
+                       track_cond: bool = False, impl: str | None = None,
+                       tiles: tuple[int, int] | None = None,
+                       guard: bool = False, fault=None,
+                       step0: int = 0) -> SolveResult:
+    """CA momentum BCD (arXiv:1711.05305): one sb x sb Gram packet per outer
+    iteration, then ``s`` local momentum-applied block solves.
+
+    At ``s=1`` this IS classical heavy-ball BCD (one block per packet, the
+    velocity applied immediately).  For ``s>1`` the momentum rides the
+    DEFERRED block updates: the inner sweep's forward-substitution
+    corrections assume the plain ``dx`` steps (that is what the packet
+    proves), and the velocity reshapes only the APPLIED update -- the CoCoA
+    -style local-subproblem flexibility (arXiv:1409.1458), not an exact
+    reordering of the classical momentum schedule.  Fixed point and wire
+    schedule are unchanged, and ``beta=0`` recovers plain CA-BCD bit-for-bit
+    at every ``s``.  ``iters % s != 0`` runs a ragged final outer
+    iteration."""
+    plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles, track_cond=track_cond,
+                      guard=guard, fault=fault)
+    return s_step_solve(MomentumWrapper(beta=beta), plan, X, y, lam, iters,
+                        key, x0=w0, idx=idx, w_ref=w_ref, step0=step0)
+
+
+def ca_accelerated_bcd_sharded(mesh, X: jax.Array, y: jax.Array, lam: float,
+                               b: int, s: int, iters: int, key: jax.Array, *,
+                               beta: float = 0.9, axis: str = "shards",
+                               fuse_packet: bool = True,
+                               idx: jax.Array | None = None, unroll: int = 1,
+                               impl: str | None = None,
+                               tiles: tuple[int, int] | None = None,
+                               guard: bool = False, fault=None,
+                               x0: jax.Array | None = None, step0: int = 0):
+    """Distributed CA momentum BCD: the primal's 1D-block-column layout, ONE
+    packet all-reduce per outer iteration -- the velocity is replicated
+    carry state, so momentum adds zero communication.  Returns (w
+    replicated, alpha sharded over n) -- plus the replicated guard metrics
+    dict when ``guard`` is set."""
+    plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles,
+                      fuse_packet=fuse_packet, unroll=unroll, guard=guard,
+                      fault=fault)
+    return s_step_solve_sharded(MomentumWrapper(beta=beta), plan, mesh, X, y,
+                                lam, iters, key, axis=axis, idx=idx, x0=x0,
+                                step0=step0)
+
+
+def ca_accelerated_bcd_pipelined(mesh, X: jax.Array, y: jax.Array, lam: float,
+                                 b: int, s: int, iters: int, key: jax.Array,
+                                 *, beta: float = 0.9, axis: str = "shards",
+                                 fuse_packet: bool = True,
+                                 idx: jax.Array | None = None,
+                                 unroll: int = 1, impl: str | None = None,
+                                 tiles: tuple[int, int] | None = None,
+                                 guard: bool = False, fault=None,
+                                 x0: jax.Array | None = None, step0: int = 0):
+    """:func:`ca_accelerated_bcd_sharded` on the pipelined ring wire
+    (DESIGN.md section 9): same layout, same momentum math, the packet
+    reduction decomposed into overlappable collective-permute hops."""
+    plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles,
+                      fuse_packet=fuse_packet, unroll=unroll, guard=guard,
+                      fault=fault, wire="ring")
+    return s_step_solve_sharded(MomentumWrapper(beta=beta), plan, mesh, X, y,
+                                lam, iters, key, axis=axis, idx=idx, x0=x0,
+                                step0=step0)
+
+
+register_formulation(MomentumWrapper())
+register_solver("accelerated", "local", ca_accelerated_bcd)
+register_solver("accelerated", "sharded", ca_accelerated_bcd_sharded)
+register_solver("accelerated", "pipelined", ca_accelerated_bcd_pipelined)
+
+# Let lower_solver resolve the wrappers itself, like the ridge entries.
+from .distributed import _CALLABLE_BACKEND, _CALLABLE_FORMULATION  # noqa: E402
+
+_CALLABLE_FORMULATION[ca_accelerated_bcd_sharded] = "accelerated"
+_CALLABLE_FORMULATION[ca_accelerated_bcd_pipelined] = "accelerated"
+_CALLABLE_BACKEND[ca_accelerated_bcd_pipelined] = "pipelined"

@@ -215,6 +215,110 @@ def batched_solves_per_second(machine: MachineModel, *, d: int, n: int,
 
 
 # --------------------------------------------------------------------------
+# Wire schedules: monolithic psum vs the pipelined ring (DESIGN.md section 9)
+# --------------------------------------------------------------------------
+# The Theorem 6/7 rows above charge the packet reduction as a tree all-reduce
+# sitting SERIALLY on the critical path: 2 log2(P) messages, payload * log2(P)
+# words, nothing overlapped.  The "pipelined" backend decomposes that psum
+# into a dimension-wise ring (per mesh axis of size P_i: a reduce-scatter of
+# P_i - 1 collective-permute hops followed by an all-gather of P_i - 1 hops)
+# and software-pipelines the outer scan so step k+1's Gram contraction -- the
+# one packet term with no data dependence on the in-flight reduction -- runs
+# between the hops.  The functions below model both schedules with the same
+# alpha-beta constants so the dryrun and pipeline_bench can put the exposed
+# wire time of each next to the other.
+
+def ring_wire_costs(payload_words: float, axis_sizes) -> tuple[float, float]:
+    """(messages, words) on the critical path of ONE dimension-wise ring
+    all-reduce of ``payload_words``: per mesh axis of size P > 1,
+    ``2 (P - 1)`` collective-permute hops moving ``2 payload (P - 1)/P``
+    words (reduce-scatter + all-gather of 1/P-size chunks); size-1 axes are
+    free.  The hop count is exactly engine.ring_hops' affine ``(2, -2)`` law
+    the analysis sweep machine-verifies against the lowered HLO."""
+    L = sum(2 * (P - 1) for P in axis_sizes)
+    W = sum(2 * payload_words * (P - 1) / P for P in axis_sizes if P > 1)
+    return float(L), float(W)
+
+
+def psum_wire_time(machine: MachineModel, payload_words: float, P: int) -> float:
+    """Serial tree all-reduce: the wire term of the Theorem 6/7 rows."""
+    return (machine.alpha * 2 * _logp(P)
+            + machine.beta * payload_words * _logp(P))
+
+
+def ring_wire_time(machine: MachineModel, payload_words: float,
+                   axis_sizes) -> float:
+    """End-to-end time of the decomposed ring reduction (no overlap credit;
+    that is ``pipeline_schedule``'s job)."""
+    L, W = ring_wire_costs(payload_words, axis_sizes)
+    return machine.alpha * L + machine.beta * W
+
+
+def pipeline_schedule(machine: MachineModel, *, d: int, n: int, axis_sizes,
+                      b: int, s: int, tenants: int = 1,
+                      formulation: str = "primal", guard: bool = False,
+                      fma: float = 2.0) -> dict:
+    """Alpha-beta-gamma model of ONE outer step under both wire schedules.
+
+    The overlappable work per outer step is the step's own compute -- the
+    shared Gram contraction (issued one step ahead by the pipelined scan) plus
+    the T tenants' sweeps and deferred updates -- so the ring hides
+    ``t_hidden = min(t_compute, t_wire_ring)`` of its wire and exposes the
+    rest; the monolithic psum exposes ALL of its wire by construction.
+
+    ``fma=2.0`` converts the Theorem-style cell counts (one per multiply-add)
+    to hardware flops, since machine peaks (e.g. 197 TFLOP/s) count the FMA
+    as two -- without it every compute time would be understated 2x against
+    the wire terms.
+
+    Returns a dict with ``payload_words``, ``hops``, ``t_compute``,
+    ``t_wire_psum``, ``t_wire_ring``, ``t_hidden``, ``t_exposed_ring``,
+    ``t_exposed_psum``, ``overlap_ratio`` (hidden/total ring wire, in
+    [0, 1]), and ``step_speedup`` (serial-psum step over pipelined step).
+    """
+    axis_sizes = tuple(int(P) for P in axis_sizes)
+    P = math.prod(axis_sizes)
+    sb = s * b
+    payload = sb * sb + tenants * sb
+    if guard:
+        from .engine import _HEALTH_WORDS
+        payload += _HEALTH_WORDS
+    # one outer step == the H=s slice of the batched critical path
+    F_step = batched_costs(d, n, P, b, s, s, tenants, formulation).flops
+    t_compute = machine.gamma * fma * F_step
+    t_psum = psum_wire_time(machine, payload, P)
+    t_ring = ring_wire_time(machine, payload, axis_sizes)
+    t_hidden = min(t_compute, t_ring)
+    ratio = t_hidden / t_ring if t_ring > 0 else 1.0
+    t_step_serial = t_compute + t_psum
+    t_step_pipe = max(t_compute, t_ring)
+    return {
+        "payload_words": float(payload),
+        "hops": float(ring_wire_costs(payload, axis_sizes)[0]),
+        "t_compute": t_compute,
+        "t_wire_psum": t_psum,
+        "t_wire_ring": t_ring,
+        "t_hidden": t_hidden,
+        "t_exposed_ring": t_ring - t_hidden,
+        "t_exposed_psum": t_psum,
+        "overlap_ratio": ratio,
+        "step_speedup": t_step_serial / t_step_pipe if t_step_pipe else 1.0,
+    }
+
+
+def overlap_ratio(machine: MachineModel, *, d: int, n: int, axis_sizes,
+                  b: int, s: int, tenants: int = 1,
+                  formulation: str = "primal", guard: bool = False) -> float:
+    """Fraction of the ring reduction's wire time hidden behind compute --
+    the acceptance number pipeline_bench records.  Latency-bound single-
+    tenant cells sit near 0 (there is almost no compute to hide behind 60
+    hops); the batched serving point is where the schedule pays."""
+    return pipeline_schedule(machine, d=d, n=n, axis_sizes=axis_sizes, b=b,
+                             s=s, tenants=tenants, formulation=formulation,
+                             guard=guard)["overlap_ratio"]
+
+
+# --------------------------------------------------------------------------
 # Per-device HBM traffic of the Gram-packet hot path (the gather term)
 # --------------------------------------------------------------------------
 # The alpha-beta-gamma model above counts inter-device words (W); on TPU the

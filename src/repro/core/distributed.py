@@ -131,9 +131,53 @@ def bdcd_sharded(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float, b: int,
                            tiles=tiles)
 
 
+# --------------------------------------------------------------------------
+# Pipelined backend: the same solves on the ring wire (DESIGN.md section 9)
+# --------------------------------------------------------------------------
+
+def ca_bcd_pipelined(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float,
+                     b: int, s: int, iters: int, key: jax.Array, *,
+                     axis: str = "shards", fuse_packet: bool = True,
+                     idx: jax.Array | None = None, unroll: int = 1,
+                     impl: str | None = None,
+                     tiles: tuple[int, int] | None = None,
+                     guard: bool = False, fault=None,
+                     x0: jax.Array | None = None, step0: int = 0):
+    """:func:`ca_bcd_sharded` on the pipelined wire: the packet reduction is
+    decomposed into a two-phase ring of collective-permute hops and the next
+    outer step's Gram contraction is software-pipelined between the phases
+    (``SolverPlan.wire="ring"``; the engine's ``_drive_pipelined``).  Same
+    layout, same signature, iterates equal to the psum backend to f64 ~1e-12
+    (ring vs tree summation order -- documented in tests/dist_checks.py)."""
+    plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles,
+                      fuse_packet=fuse_packet, unroll=unroll, guard=guard,
+                      fault=fault, wire="ring")
+    return s_step_solve_sharded("primal", plan, mesh, X, y, lam, iters, key,
+                                axis=axis, idx=idx, x0=x0, step0=step0)
+
+
+def ca_bdcd_pipelined(mesh: Mesh, X: jax.Array, y: jax.Array, lam: float,
+                      b: int, s: int, iters: int, key: jax.Array, *,
+                      axis: str = "shards", fuse_packet: bool = True,
+                      idx: jax.Array | None = None, unroll: int = 1,
+                      impl: str | None = None,
+                      tiles: tuple[int, int] | None = None,
+                      guard: bool = False, fault=None,
+                      x0: jax.Array | None = None, step0: int = 0):
+    """:func:`ca_bdcd_sharded` on the pipelined ring wire (see
+    :func:`ca_bcd_pipelined`)."""
+    plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles,
+                      fuse_packet=fuse_packet, unroll=unroll, guard=guard,
+                      fault=fault, wire="ring")
+    return s_step_solve_sharded("dual", plan, mesh, X, y, lam, iters, key,
+                                axis=axis, idx=idx, x0=x0, step0=step0)
+
+
 # The CA wrappers (s=1 = classical) are the canonical registry entries.
 register_solver("primal", "sharded", ca_bcd_sharded)
 register_solver("dual", "sharded", ca_bdcd_sharded)
+register_solver("primal", "pipelined", ca_bcd_pipelined)
+register_solver("dual", "pipelined", ca_bdcd_pipelined)
 
 
 # --------------------------------------------------------------------------
@@ -158,26 +202,37 @@ def _resolve_formulation(solver):
 _CALLABLE_FORMULATION.update({
     ca_bcd_sharded: "primal", bcd_sharded: "primal",
     ca_bdcd_sharded: "dual", bdcd_sharded: "dual",
+    ca_bcd_pipelined: "primal", ca_bdcd_pipelined: "dual",
 })
+
+_CALLABLE_BACKEND = {ca_bcd_pipelined: "pipelined",
+                     ca_bdcd_pipelined: "pipelined"}
 
 
 def lower_solver(solver, mesh: Mesh, d: int, n: int, lam: float, b: int, s: int,
                  iters: int, *, axis: str = "shards", fuse_packet: bool = True,
                  dtype=jnp.float32, col_sharded: bool | None = None,
                  unroll: int = 1, impl: str | None = None,
-                 tiles: tuple[int, int] | None = None, **solver_kw):
+                 tiles: tuple[int, int] | None = None,
+                 backend: str = "sharded", **solver_kw):
     """Lower+compile a solver on abstract operands; returns the Compiled object
     (for HLO collective counting and roofline terms).  ``solver`` is a
     formulation name from the registry (``"primal"`` / ``"dual"`` /
-    ``"proximal"``) or one of the sharded solver entry points (back-compat).
-    Input shardings are derived from the formulation's layout; ``col_sharded``
-    is retained for callers that pin it explicitly.  ``impl`` and ``tiles``
-    (explicit kernel (bm, bk), overriding the autotuned pick) are forwarded to
-    the solver's Gram-packet dispatch; any extra ``solver_kw`` (e.g. the
-    proximal formulation's ``lam1``) ride through to the solver entry."""
+    ``"proximal"`` / ``"accelerated"``) or one of the distributed solver
+    entry points (back-compat; a pipelined entry point implies
+    ``backend="pipelined"``).  ``backend`` picks the distributed registry
+    column for a string ``solver`` -- ``"sharded"`` (psum wire) or
+    ``"pipelined"`` (ring wire).  Input shardings are derived from the
+    formulation's layout; ``col_sharded`` is retained for callers that pin it
+    explicitly.  ``impl`` and ``tiles`` (explicit kernel (bm, bk), overriding
+    the autotuned pick) are forwarded to the solver's Gram-packet dispatch;
+    any extra ``solver_kw`` (e.g. the proximal formulation's ``lam1``) ride
+    through to the solver entry."""
     from jax.sharding import NamedSharding
     formulation = _resolve_formulation(solver)
-    solve = get_solver(formulation, "sharded")
+    if not isinstance(solver, str):
+        backend = _CALLABLE_BACKEND.get(solver, backend)
+    solve = get_solver(formulation, backend)
     if col_sharded is None:
         # The Formulation owns its layout: lower with the same input specs
         # its shard_map body expects, so the compiled collective schedule is
@@ -229,18 +284,19 @@ def lower_solver_batched(formulation, mesh: Mesh | None, d: int, n: int,
                          axis: str = "shards", dtype=jnp.float32,
                          unroll: int = 1, impl: str | None = None,
                          tiles: tuple[int, int] | None = None,
-                         coeff_names: tuple = ()):
+                         coeff_names: tuple = (), wire: str = "psum"):
     """Lower+compile a BATCHED multi-tenant solve on abstract operands --
     sharded when ``mesh`` is given, local otherwise.  The contract engine
     lowers these at T in {1, 8, 64} to machine-check the shared-packet
-    invariant: exactly H = ceil(iters/s) all-reduces independent of T, with
+    invariant: exactly H = ceil(iters/s) reductions independent of T, with
     the Gram part of the per-step payload not scaled by T.  ``coeff_names``
     become per-tenant ``TenantBatch.coeffs`` entries (e.g. the proximal
-    ``lam1``)."""
+    ``lam1``); ``wire="ring"`` lowers the pipelined backend's decomposed
+    reduction (sharded only)."""
     formulation = _resolve_formulation(formulation) \
         if not isinstance(formulation, str) else formulation
     plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles, unroll=unroll,
-                      tenants=tenants)
+                      tenants=tenants, wire=wire)
     X, ys, lams, coeffs, key = _batched_lowering_operands(
         formulation, tenants, d, n, dtype, coeff_names, mesh=mesh, axis=axis)
 

@@ -122,6 +122,16 @@ class SolverContracts:
       outer step INDEPENDENT of the tenant count, with the Gram part of the
       packet payload not scaled by T (DESIGN.md section 8; the analysis
       sweep lowers batched cases at T in {1, 8, 64} and checks both).
+    * ``pipelined_collective_kinds`` / ``pipelined_hops``: the wire schedule
+      of the PIPELINED backend (``SolverPlan.wire == "ring"``, DESIGN.md
+      section 9).  The kinds tuple is the only collective opcodes allowed in
+      the pipelined lowering; ``pipelined_hops`` is the per-sync op count as
+      an affine law ``(a, c)`` meaning ``sum_i (a * P_i + c)`` over the mesh
+      axis sizes -- the default ``(2, -2)`` is the two-phase ring's
+      ``2 (P_i - 1)`` collective-permute hops per axis.  The analysis sweep
+      computes the expected count from the mesh it lowers on
+      (:func:`ring_hops`), so a backend with a different decomposition
+      declares its law here instead of hand-editing count asserts.
     """
     sync_per_outer: int = 1
     collective_kinds: tuple = ("all-reduce",)
@@ -132,6 +142,8 @@ class SolverContracts:
     health_in_packet: bool = False
     lowering_kwargs: tuple = ()
     tenant_batched: bool = False
+    pipelined_collective_kinds: tuple = ("collective-permute",)
+    pipelined_hops: tuple = (2, -2)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,6 +157,14 @@ class SolverPlan:
     ``fuse_packet`` picks the wire layout of the distributed reduction (see
     :func:`_packet_reduce`); ``unroll`` is forwarded to the outer scan;
     ``track_cond`` records cond(Gram) per outer iteration in the history.
+
+    ``wire`` picks the reduction SCHEDULE of the distributed backends:
+    ``"psum"`` (default) is the monolithic packet all-reduce; ``"ring"`` is
+    the pipelined backend's collective-permute decomposition -- a two-phase
+    ring of ``ppermute`` hops per mesh axis with the next outer step's Gram
+    contraction software-pipelined between the phases (DESIGN.md section 9).
+    The iterates agree to f64 ~1e-12 (the ring's summation order differs
+    from psum's tree, so bit-for-bit is not guaranteed across wires).
 
     ``guard`` enables the in-scan health guards (DESIGN.md section 7): a
     per-outer-step health word rides the ONE packet reduction (zero extra
@@ -175,6 +195,7 @@ class SolverPlan:
     guard_cond_max: float | None = None
     fault: object | None = None
     tenants: int | None = None
+    wire: str = "psum"
 
     def __post_init__(self):
         # Fail fast at plan construction: a typo'd impl or a zero tile would
@@ -202,6 +223,9 @@ class SolverPlan:
                 "apply_packet/apply_health (see repro.faults.FaultPlan)")
         if self.tenants is not None:
             _check_positive_int("SolverPlan.tenants", self.tenants)
+        if self.wire not in ("psum", "ring"):
+            raise ValueError(
+                f"SolverPlan.wire={self.wire!r} must be 'psum' or 'ring'")
         self.packet  # PacketPlan.make validates impl and the tile values
 
     @property
@@ -640,6 +664,91 @@ def psum_variadic(leaves, axis):
     return out
 
 
+def ring_hops(axis_sizes, law: tuple = (2, -2)) -> int:
+    """Collective-permute ops per sync of the ring wire: the affine law
+    ``sum_i (a * P_i + c)`` a formulation declares via
+    ``SolverContracts.pipelined_hops``.  The default ``(2, -2)`` is the
+    two-phase ring's ``2 (P_i - 1)`` hops per mesh axis (a reduce-scatter
+    and an all-gather round of ``P_i - 1`` hops each); size-1 axes
+    contribute zero hops under that law, matching the implementation's
+    skip."""
+    a, c = law
+    return sum(a * p + c for p in axis_sizes)
+
+
+def _ring_reduce_scatter(flat, name, P):
+    """Phase one of the ring: ``P - 1`` ``ppermute`` hops of one chunk each,
+    accumulating around the ring.  After the last hop this shard owns the
+    fully-reduced chunk ``(me + 1) % P``.  Every chunk ``j`` is summed along
+    ONE fixed chain (shard j's value, then j+1's, then j+2's, ...) no matter
+    which shard ends up owning it, so the reduced chunks are deterministic
+    bytes -- the property phase two turns into replicated-carry consistency."""
+    pad = (-flat.shape[0]) % P
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    buf = flat.reshape(P, flat.shape[0] // P)
+    me = jax.lax.axis_index(name)
+    perm = [(i, (i + 1) % P) for i in range(P)]
+    for t in range(P - 1):
+        send = jnp.take(buf, (me - t) % P, axis=0)
+        recv = jax.lax.ppermute(send, name, perm)
+        buf = buf.at[(me - t - 1) % P].add(recv)
+    return buf, me
+
+
+def _ring_all_gather(buf, me, name, P):
+    """Phase two: circulate the reduced chunks another ``P - 1`` hops.
+    Received chunks are stored VERBATIM (no arithmetic), so every shard ends
+    holding the same bytes phase one produced -- replicated carries stay
+    replicated without a psum."""
+    perm = [(i, (i + 1) % P) for i in range(P)]
+    for t in range(P - 1):
+        send = jnp.take(buf, (me + 1 - t) % P, axis=0)
+        recv = jax.lax.ppermute(send, name, perm)
+        buf = buf.at[(me - t) % P].set(recv)
+    return buf.reshape(-1)
+
+
+def ring_reduce_variadic(leaves, axis, axis_sizes, overlap_fn=None):
+    """The pipelined wire: the SAME variadic packet as :func:`psum_variadic`,
+    reduced by a two-phase ring of ``ppermute`` hops per mesh axis instead of
+    one monolithic psum -- ``2 (P_i - 1)`` collective-permutes per axis,
+    each moving a ``1/P_i`` chunk, with NO all-reduce anywhere.
+
+    ``overlap_fn`` (nullary) is the software-pipelining hook: it is invoked
+    between the first ring's reduce-scatter and all-gather phases, and its
+    result is returned alongside the reduced leaves.  The hook's compute has
+    ZERO data dependence on the in-flight reduction (the pipelined driver
+    passes the NEXT outer step's Gram contraction, which depends only on the
+    index stream), which is what frees a latency-hiding scheduler to run it
+    under the hops -- the overlap ``cost_model.overlap_ratio`` accounts.
+
+    Numerics: each chunk is summed along one fixed ring chain and broadcast
+    verbatim, so all shards hold IDENTICAL reduced bytes (replicated carries
+    stay replicated), but the association differs from psum's tree -- equal
+    to the psum wire to f64 ~1e-12, not bit-for-bit.
+    """
+    shapes = [x.shape for x in leaves]
+    flat = jnp.concatenate([x.ravel() for x in leaves])
+    size = flat.shape[0]
+    extra = None
+    for name, P in zip(_axes(axis), axis_sizes):
+        if P == 1:
+            continue
+        buf, me = _ring_reduce_scatter(flat, name, P)
+        if extra is None and overlap_fn is not None:
+            extra = overlap_fn()
+        flat = _ring_all_gather(buf, me, name, P)[:size]
+    if extra is None and overlap_fn is not None:
+        extra = overlap_fn()        # degenerate all-size-1 mesh: no hops
+    out, off = [], 0
+    for sh in shapes:
+        sz = math.prod(sh)
+        out.append(flat[off:off + sz].reshape(sh))
+        off += sz
+    return out, extra
+
+
 def _packet_reduce(G_local, r_local, axis, fuse, health=None):
     """THE sync point: one all-reduce per outer iteration, either as the
     fused sb x (sb+1) Gram||residual operand (``fuse_packet=True``, ours) or
@@ -946,13 +1055,135 @@ def _outer_step(bound: BoundFormulation, plan: SolverPlan, s_k: int, carry,
     return carry, gstate, hist
 
 
+def _gram_only(operand, flat, pp):
+    """The Gram half of the packet for a FUTURE outer step.  ``u = 0`` /
+    ``scale_r = 0`` make the fused residual output a don't-care, so this
+    runs the same contraction cells as the fused packet's G (the batched
+    driver's shared-Gram precedent) -- and, crucially, depends only on the
+    index stream, never the solver carry, so the pipelined scan can contract
+    step k+1's Gram while step k's reduction is on the wire."""
+    u0 = jnp.zeros((operand.contraction,), operand.dtype)
+    G, _ = gram_packet_sampled(operand, flat, u0, scale=1.0, scale_r=0.0,
+                               reg=0.0, plan=pp)
+    return G
+
+
+def _outer_step_pipelined(bound: BoundFormulation, plan: SolverPlan, s_k: int,
+                          carry, Gl, idx_k, flat_next, *, axis, axis_sizes,
+                          step=None, gstate=None, n_shards=1):
+    """ONE outer iteration on the pipelined wire (``plan.wire == "ring"``).
+
+    ``Gl`` is THIS step's local Gram contribution, contracted one step ahead
+    and double-buffered through the scan carry.  The body adds the
+    carry-dependent half of the packet (the residual direction, which cannot
+    be skewed), puts the whole packet -- Gram, residual, and in guard mode
+    the health word, zero extra collectives -- on the decomposed ring
+    reduction, and contracts the NEXT step's Gram between the ring's
+    reduce-scatter and all-gather phases: the compute the monolithic psum
+    would serialize behind the wire.  Fault hooks apply at consumption time,
+    exactly where the psum backend applies them, so injection semantics (and
+    the guard verdicts they trip) are identical across wires.
+    """
+    b = plan.b
+    sb = s_k * b
+    pp = plan.packet
+    dtype = bound.operand.dtype
+    flat = idx_k.reshape(sb)
+    u = bound.packet_vector(carry)
+    # Same contraction cells as the fused packet's r (the batched driver's
+    # panel_matvec precedent); raw like every packet, scales applied by the
+    # shared _assemble_subproblem.
+    rl = panel_matvec(bound.operand, flat, u, scale=1.0, plan=pp)
+    if plan.fault is not None:
+        Gl, rl = plan.fault.apply_packet(Gl, rl, step=step, axis=axis)
+    leaves = [Gl, rl]
+    if plan.guard:
+        health = _health_local(Gl, rl, carry, u, dtype)
+        if plan.fault is not None:
+            health = plan.fault.apply_health(health, step=step, axis=axis)
+        leaves.append(health)
+    red, Gl_next = ring_reduce_variadic(
+        leaves, axis, axis_sizes,
+        overlap_fn=lambda: _gram_only(bound.operand, flat_next, pp))
+    G, r = red[0], red[1]
+    h = red[2] if plan.guard else None
+    O = overlap_matrix(flat).astype(dtype)
+    A, base = _assemble_subproblem(bound, G, r, carry, flat, O, sb)
+    if plan.guard:
+        dxs, gstate, _ = _guarded_sweep(bound, plan, A, base, s_k, b, flat,
+                                        carry, O, h, gstate, step, n_shards,
+                                        dtype)
+    else:
+        dxs = bound.inner_sweep(A, base, s_k, b, flat, carry, O)
+    return bound.update(carry, flat, dxs, pp), gstate, Gl_next
+
+
+def _drive_pipelined(bound: BoundFormulation, plan: SolverPlan, idx, *, axis,
+                     axis_sizes, n_shards=1, step0=0):
+    """The software-pipelined s-step scan (``plan.wire == "ring"``): same
+    outer/ragged split as :func:`_drive`, over :func:`_outer_step_pipelined`.
+
+    The skew: the scan carry double-buffers the NEXT outer step's local Gram
+    contribution.  A prologue contracts step 0's Gram before the scan; each
+    step consumes the carried Gram, rides the ring, and contracts its
+    successor's between the ring phases.  The epilogue cost is one discarded
+    ``sb x sb`` contraction per scan segment (the last step's ``flat_next``
+    is its own indices, standing in for a nonexistent step H+1) -- the
+    standard software-pipelining prologue/epilogue shape.  The ragged tail's
+    packet has a different width, so it runs its own prologue + length-1
+    scan, like :func:`_drive`'s tail and for the same compiled-body reasons.
+
+    History collection is not supported: the pipelined backend exists for
+    the metric-free distributed fast path.  Returns ``(carry, {}, gstate)``.
+    """
+    s, b = plan.s, plan.b
+    pp = plan.packet
+    iters = idx.shape[0]
+    outer_full, rem = divmod(iters, s)
+    carry = bound.init_carry(axes=_axes(axis))
+    gstate = _guard_init(bound.operand.dtype) if plan.guard else None
+    if outer_full:
+        blocks = idx[:outer_full * s].reshape(outer_full, s, b)
+        flats = blocks.reshape(outer_full, s * b)
+        flats_next = jnp.concatenate([flats[1:], flats[-1:]])
+        Gl0 = _gram_only(bound.operand, flats[0], pp)
+
+        def outer(cg, xs):
+            step, idx_k, flat_next = xs
+            c, g, Gl = _outer_step_pipelined(
+                bound, plan, s, cg[0], cg[2], idx_k, flat_next, axis=axis,
+                axis_sizes=axis_sizes, step=step, gstate=cg[1],
+                n_shards=n_shards)
+            return (c, g, Gl), None
+        steps = jnp.arange(outer_full, dtype=jnp.int32) + step0
+        (carry, gstate, _), _ = jax.lax.scan(
+            outer, (carry, gstate, Gl0), (steps, blocks, flats_next),
+            unroll=plan.unroll)
+    if rem:
+        flat_t = idx[outer_full * s:].reshape(rem * b)
+        Gl_t = _gram_only(bound.operand, flat_t, pp)
+
+        def tail(cg, xs):
+            step, idx_k = xs
+            c, g, Gl = _outer_step_pipelined(
+                bound, plan, rem, cg[0], cg[2], idx_k, flat_t, axis=axis,
+                axis_sizes=axis_sizes, step=step, gstate=cg[1],
+                n_shards=n_shards)
+            return (c, g, Gl), None
+        (carry, gstate, _), _ = jax.lax.scan(
+            tail, (carry, gstate, Gl_t),
+            (jnp.asarray([outer_full + step0], jnp.int32),
+             idx[outer_full * s:][None]))
+    return carry, {}, gstate
+
+
 def _resolve_form(formulation) -> "Formulation":
     """Resolve a formulation name (or pass an instance through), pulling in
     the sibling modules that self-register on first use."""
     if not isinstance(formulation, str):
         return formulation
     if formulation not in FORMULATIONS:
-        from . import bcd, bdcd, distributed, proximal  # noqa: F401
+        from . import accelerated, bcd, bdcd, distributed, proximal  # noqa: F401
     try:
         return FORMULATIONS[formulation]
     except KeyError:
@@ -971,7 +1202,7 @@ def _check_idx(idx, iters: int, b: int) -> None:
 
 
 def _drive(bound: BoundFormulation, plan: SolverPlan, idx, *, axis=None,
-           collect=True, n_shards=1, step0=0):
+           collect=True, n_shards=1, step0=0, axis_sizes=None):
     """The engine's s-step scan: ``iters // s`` outer iterations through ONE
     ``lax.scan`` over :func:`_outer_step`, plus (when ``iters % s != 0``) a
     single ragged call of the same body with ``s_k = iters % s``.
@@ -980,7 +1211,15 @@ def _drive(bound: BoundFormulation, plan: SolverPlan, idx, *, axis=None,
     hooks, so a segmented solve (the supervisor's checkpointed resume) keeps
     globally meaningful step numbers.  Returns ``(carry, history, gstate)``
     with ``gstate=None`` when guards are off.
+
+    ``plan.wire == "ring"`` (distributed only; ``axis_sizes`` carries the
+    static mesh axis sizes the ring needs) reroutes to the software-
+    pipelined driver :func:`_drive_pipelined`.
     """
+    if plan.wire == "ring" and axis is not None:
+        return _drive_pipelined(bound, plan, idx, axis=axis,
+                                axis_sizes=axis_sizes, n_shards=n_shards,
+                                step0=step0)
     s, b = plan.s, plan.b
     iters = idx.shape[0]
     outer_full, rem = divmod(iters, s)
@@ -1050,13 +1289,20 @@ def s_step_solve(formulation: Formulation | str, plan: SolverPlan,
     in-scan recovery of rung one is the whole story).
     """
     form = _resolve_form(formulation)
+    if plan.wire != "psum":
+        raise ValueError(
+            f"SolverPlan.wire={plan.wire!r} needs a distributed backend; "
+            "the local solve has no reduction to decompose")
     d, n = X.shape
     if idx is None:
         idx = sample_blocks(key, form.sample_dim(d, n), plan.b, iters)
     else:
         _check_idx(idx, iters, plan.b)
     bound = form.bind(X, y, lam, x0=x0, w_ref=w_ref)
-    (w, alpha), history, gstate = _drive(bound, plan, idx, step0=step0)
+    # Generic carry unpack: formulations may carry extra scan state beyond
+    # (w, alpha) -- the accelerated formulation's velocity rides at [2:].
+    carry, history, gstate = _drive(bound, plan, idx, step0=step0)
+    w, alpha = carry[0], carry[1]
     metrics = {}
     if plan.guard:
         metrics = _guard_metrics(gstate)
@@ -1127,7 +1373,8 @@ def s_step_solve_sharded(formulation: Formulation | str, plan: SolverPlan,
         idx = sample_blocks(key, form.sample_dim(d, n), plan.b, iters)
     else:
         _check_idx(idx, iters, plan.b)
-    n_shards = math.prod(mesh.shape[a] for a in _axes(axis))
+    axis_sizes = tuple(mesh.shape[a] for a in _axes(axis))
+    n_shards = math.prod(axis_sizes)
     X, y = form.pad_shards(X, y, n_shards)
     has_x0 = x0 is not None
 
@@ -1136,7 +1383,7 @@ def s_step_solve_sharded(formulation: Formulation | str, plan: SolverPlan,
         bound = form.bind_shard(Xl, yl, lam, d=d, n=n, **kw)
         carry, _, gstate = _drive(bound, plan, idx_rep, axis=axis,
                                   collect=False, n_shards=n_shards,
-                                  step0=step0)
+                                  step0=step0, axis_sizes=axis_sizes)
         return (carry, gstate) if plan.guard else carry
 
     in_specs = form.dist_in_specs(axis) + ((P(None),) if has_x0 else ())
@@ -1146,12 +1393,14 @@ def s_step_solve_sharded(formulation: Formulation | str, plan: SolverPlan,
     fn = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
                           out_specs=out_specs)
     args = (X, y, idx) + ((x0,) if has_x0 else ())
+    # Generic carry unpack, like s_step_solve: extra carry leaves (the
+    # accelerated velocity) ride at [2:] and are dropped by dist_finalize.
     if plan.guard:
-        (w, alpha), gstate = fn(*args)
-        w, alpha = form.dist_finalize(w, alpha, d, n)
+        carry, gstate = fn(*args)
+        w, alpha = form.dist_finalize(carry[0], carry[1], d, n)
         return w, alpha, _guard_metrics(gstate)
-    w, alpha = fn(*args)
-    return form.dist_finalize(w, alpha, d, n)
+    carry = fn(*args)
+    return form.dist_finalize(carry[0], carry[1], d, n)
 
 
 # --------------------------------------------------------------------------
@@ -1305,7 +1554,7 @@ def _init_batched(spec: _BatchedSpec, batch: TenantBatch, axes):
 
 
 def _outer_step_batched(spec: _BatchedSpec, plan: SolverPlan, s_k: int, state,
-                        idx_k, *, axis=None):
+                        idx_k, *, axis=None, axis_sizes=None):
     """ONE batched outer iteration.  The sb x sb Gram contraction -- and, in
     distributed mode, its single psum -- happens ONCE and is reused by every
     tenant; only the per-tenant residual directions (T, sb) ride along, so
@@ -1347,8 +1596,14 @@ def _outer_step_batched(spec: _BatchedSpec, plan: SolverPlan, s_k: int, state,
 
     if dist:
         # THE sync point, amortized across the tenant axis: one variadic
-        # all-reduce moving sb^2 + T*sb words per outer step.
-        G0, R = psum_variadic([G0, R], axis)
+        # packet moving sb^2 + T*sb words per outer step.  On the ring wire
+        # the shared Gram AND every tenant's direction ride the SAME
+        # decomposed reduction -- zero extra collectives vs the psum wire,
+        # just 2(P_i - 1) permute hops per axis instead of one all-reduce.
+        if plan.wire == "ring":
+            (G0, R), _ = ring_reduce_variadic([G0, R], axis, axis_sizes)
+        else:
+            G0, R = psum_variadic([G0, R], axis)
 
     if dist or s_k > 1:
         O = overlap_matrix(flat).astype(dtype)
@@ -1408,7 +1663,7 @@ def _outer_step_batched(spec: _BatchedSpec, plan: SolverPlan, s_k: int, state,
 
 
 def _drive_batched(spec: _BatchedSpec, plan: SolverPlan, idx, state0, *,
-                   axis=None):
+                   axis=None, axis_sizes=None):
     """The batched s-step scan: same outer/ragged split as :func:`_drive`,
     over :func:`_outer_step_batched`."""
     s, b = plan.s, plan.b
@@ -1417,8 +1672,8 @@ def _drive_batched(spec: _BatchedSpec, plan: SolverPlan, idx, state0, *,
     state = state0
     if outer_full:
         def outer(st, idx_k):
-            return _outer_step_batched(spec, plan, s, st, idx_k,
-                                       axis=axis), None
+            return _outer_step_batched(spec, plan, s, st, idx_k, axis=axis,
+                                       axis_sizes=axis_sizes), None
         state, _ = jax.lax.scan(
             outer, state, idx[:outer_full * s].reshape(outer_full, s, b),
             unroll=plan.unroll)
@@ -1428,8 +1683,8 @@ def _drive_batched(spec: _BatchedSpec, plan: SolverPlan, idx, state0, *,
         # an eager tail here would constant-fold the gathers and round the
         # per-tenant rhs seam differently (see _assemble_subproblem).
         def tail(st, idx_k):
-            return _outer_step_batched(spec, plan, rem, st, idx_k,
-                                       axis=axis), None
+            return _outer_step_batched(spec, plan, rem, st, idx_k, axis=axis,
+                                       axis_sizes=axis_sizes), None
         state, _ = jax.lax.scan(tail, state, idx[outer_full * s:][None])
     return state
 
@@ -1475,6 +1730,10 @@ def s_step_solve_batched(formulation: Formulation | str, plan: SolverPlan,
     """
     form = _resolve_form(formulation)
     _check_batched(form, plan, batch)
+    if plan.wire != "psum":
+        raise ValueError(
+            f"SolverPlan.wire={plan.wire!r} needs a distributed backend; "
+            "the local batched solve has no reduction to decompose")
     d, n = X.shape
     if idx is None:
         idx = sample_blocks(key, form.sample_dim(d, n), plan.b, iters)
@@ -1554,7 +1813,8 @@ def s_step_solve_batched_sharded(formulation: Formulation | str,
         idx = sample_blocks(key, form.sample_dim(d, n), plan.b, iters)
     else:
         _check_idx(idx, iters, plan.b)
-    n_shards = math.prod(mesh.shape[a] for a in _axes(axis))
+    axis_sizes = tuple(mesh.shape[a] for a in _axes(axis))
+    n_shards = math.prod(axis_sizes)
     Xp, _ = form.pad_shards(X, batch.ys[0], n_shards)
     ysp = jax.vmap(lambda y: form.pad_shards(X, y, n_shards)[1])(batch.ys)
     # Pin host-exact derived constants while the lams are still concrete
@@ -1575,7 +1835,7 @@ def s_step_solve_batched_sharded(formulation: Formulation | str,
         carries = _init_batched(spec, local, _axes(axis))
         active = jnp.ones((local.tenants,), bool)
         state = _drive_batched(spec, plan, idx_rep, (carries, active),
-                               axis=axis)
+                               axis=axis, axis_sizes=axis_sizes)
         return state[0]
 
     def widen(p):
@@ -1602,7 +1862,7 @@ def s_step_solve_batched_sharded(formulation: Formulation | str,
 # Solver registry, keyed on (formulation, backend)
 # --------------------------------------------------------------------------
 
-BACKENDS = ("local", "sharded")
+BACKENDS = ("local", "sharded", "pipelined")
 _REGISTRY: dict[tuple[str, str], Callable] = {}
 
 
@@ -1610,7 +1870,9 @@ def register_solver(formulation: str, backend: str, fn: Callable) -> Callable:
     """Register a solver entry point under ``(formulation, backend)``.  The
     four ridge entries are registered by ``repro.core.bcd`` / ``.bdcd`` /
     ``.distributed`` at import; new formulations add theirs next to their
-    Formulation class."""
+    Formulation class.  ``pipelined`` entries share the sharded signature
+    (mesh leading) and differ only in the wire schedule
+    (``SolverPlan.wire == "ring"``, DESIGN.md section 9)."""
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
     _REGISTRY[(formulation, backend)] = fn
@@ -1619,13 +1881,13 @@ def register_solver(formulation: str, backend: str, fn: Callable) -> Callable:
 
 def get_solver(formulation: str, backend: str = "local") -> Callable:
     """Look up a solver.  ``local`` entries have the classical CA signature
-    ``(X, y, lam, b, s, iters, key, **kw)``; ``sharded`` entries lead with the
-    mesh: ``(mesh, X, y, lam, b, s, iters, key, **kw)``."""
+    ``(X, y, lam, b, s, iters, key, **kw)``; ``sharded`` and ``pipelined``
+    entries lead with the mesh: ``(mesh, X, y, lam, b, s, iters, key, **kw)``."""
     if (formulation, backend) not in _REGISTRY:
         # The built-in entries are registered by the sibling wrapper modules
         # at import; pull them in lazily so `from repro.core.engine import
         # get_solver` works without the package __init__ having run first.
-        from . import bcd, bdcd, distributed, proximal  # noqa: F401
+        from . import accelerated, bcd, bdcd, distributed, proximal  # noqa: F401
     try:
         return _REGISTRY[(formulation, backend)]
     except KeyError:

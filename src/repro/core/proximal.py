@@ -243,11 +243,35 @@ def ca_proximal_bcd_sharded(mesh, X: jax.Array, y: jax.Array, lam: float,
                                 step0=step0)
 
 
+def ca_proximal_bcd_pipelined(mesh, X: jax.Array, y: jax.Array, lam: float,
+                              b: int, s: int, iters: int, key: jax.Array, *,
+                              lam1: float = 0.0, axis: str = "shards",
+                              fuse_packet: bool = True,
+                              idx: jax.Array | None = None, unroll: int = 1,
+                              impl: str | None = None,
+                              tiles: tuple[int, int] | None = None,
+                              guard: bool = False, fault=None,
+                              x0: jax.Array | None = None, step0: int = 0):
+    """:func:`ca_proximal_bcd_sharded` on the pipelined ring wire (DESIGN.md
+    section 9): same layout and threshold math, the packet reduction
+    decomposed into overlappable collective-permute hops.  Matches the psum
+    wire to f64 ~1e-12 (reduction order differs)."""
+    plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles,
+                      fuse_packet=fuse_packet, unroll=unroll, guard=guard,
+                      fault=fault, wire="ring")
+    return s_step_solve_sharded(ProximalElasticNet(lam1=lam1), plan, mesh, X,
+                                y, lam, iters, key, axis=axis, idx=idx, x0=x0,
+                                step0=step0)
+
+
 register_formulation(ProximalElasticNet())
 register_solver("proximal", "local", ca_proximal_bcd)
 register_solver("proximal", "sharded", ca_proximal_bcd_sharded)
+register_solver("proximal", "pipelined", ca_proximal_bcd_pipelined)
 
-# Let lower_solver resolve the sharded wrapper itself, like the ridge entries.
-from .distributed import _CALLABLE_FORMULATION  # noqa: E402
+# Let lower_solver resolve the wrappers itself, like the ridge entries.
+from .distributed import _CALLABLE_BACKEND, _CALLABLE_FORMULATION  # noqa: E402
 
 _CALLABLE_FORMULATION[ca_proximal_bcd_sharded] = "proximal"
+_CALLABLE_FORMULATION[ca_proximal_bcd_pipelined] = "proximal"
+_CALLABLE_BACKEND[ca_proximal_bcd_pipelined] = "pipelined"

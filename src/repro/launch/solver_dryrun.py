@@ -23,8 +23,26 @@ import json
 import time
 
 from repro.core import FORMULATIONS, count_in_compiled
+from repro.core.cost_model import TPU_V5E_ICI, pipeline_schedule
 from repro.core.distributed import lower_solver, lower_solver_batched
 from repro.launch.mesh import make_production_mesh
+
+
+def _overlap_fields(mesh, b: int, s: int, tenants: int = 1,
+                    formulation: str = "primal") -> dict:
+    """Modeled wire-schedule comparison (DESIGN.md section 9) for one cell:
+    what the monolithic psum exposes vs what the pipelined ring hides, on the
+    ICI machine model at this mesh's axis sizes."""
+    d, n = 4096, 1 << 22
+    form = formulation if formulation == "dual" else "primal"
+    sch = pipeline_schedule(TPU_V5E_ICI, d=d, n=n,
+                            axis_sizes=tuple(mesh.shape[a]
+                                             for a in mesh.axis_names),
+                            b=b, s=s, tenants=tenants, formulation=form)
+    return {"modeled_overlap_ratio": sch["overlap_ratio"],
+            "modeled_exposed_psum_s": sch["t_exposed_psum"],
+            "modeled_exposed_ring_s": sch["t_exposed_ring"],
+            "modeled_ring_hops": sch["hops"]}
 
 
 def run(out_dir: str = "artifacts/solver", impl: str | None = None,
@@ -53,7 +71,7 @@ def run(out_dir: str = "artifacts/solver", impl: str | None = None,
                 ca = ca[0]
             rec = {
                 "mesh": mesh_kind, "chips": mesh.size, "s": s, "fused": fused,
-                "formulation": formulation,
+                "wire": "psum", "formulation": formulation,
                 # PacketOperand layout the formulation binds (the dual's
                 # "cols" cells lower with NO pre-transpose in the shard body)
                 "operand_layout": getattr(FORMULATIONS[formulation],
@@ -62,12 +80,37 @@ def run(out_dir: str = "artifacts/solver", impl: str | None = None,
                 "operand_bytes": cs.operand_bytes, "link_bytes": cs.link_bytes,
                 "flops_per_device": ca.get("flops", 0.0),
                 "compile_s": round(time.time() - t0, 1),
+                **_overlap_fields(mesh, b, s, formulation=formulation),
             }
             results.append(rec)
             print(f"[solver-dryrun] {mesh_kind} s={s} fused={fused}: "
                   f"{cs.count} collectives / {iters} iters, "
                   f"{cs.operand_bytes:.2e} B wire, "
                   f"compile {rec['compile_s']}s", flush=True)
+        # The pipelined backend's ring cell at the best-s point: same packet,
+        # the reduction decomposed into collective-permute hops so the next
+        # step's Gram contraction overlaps the wire (DESIGN.md section 9).
+        s = 8
+        t0 = time.time()
+        comp = lower_solver(formulation, mesh, d, n, 1e-3, b, s, iters,
+                            axis=axis, fuse_packet=True, unroll=iters // s,
+                            impl=impl, backend="pipelined", **solver_kw)
+        cs = count_in_compiled(comp)
+        rec = {
+            "mesh": mesh_kind, "chips": mesh.size, "s": s, "fused": True,
+            "wire": "ring", "formulation": formulation,
+            "operand_layout": getattr(FORMULATIONS[formulation],
+                                      "operand_layout", "rows"),
+            "iters": iters, "collectives": cs.count,
+            "operand_bytes": cs.operand_bytes, "link_bytes": cs.link_bytes,
+            "compile_s": round(time.time() - t0, 1),
+            **_overlap_fields(mesh, b, s, formulation=formulation),
+        }
+        results.append(rec)
+        print(f"[solver-dryrun] {mesh_kind} s={s} wire=ring: "
+              f"{cs.count} collectives / {iters} iters "
+              f"(modeled overlap {rec['modeled_overlap_ratio']:.2f}), "
+              f"compile {rec['compile_s']}s", flush=True)
     # Keyed by formulation so a proximal dry-run does not clobber the primal
     # artifact ("solver_cells.json" keeps its historical name for primal).
     fname = ("solver_cells.json" if formulation == "primal"
@@ -112,6 +155,11 @@ def run_batched(tenants: int, out_dir: str = "artifacts/solver",
                 "modeled_bytes_per_iter_per_tenant": tenant_bytes_per_iter(
                     d, n, mesh.size, b, s, tenants, formulation),
                 "compile_s": round(time.time() - t0, 1),
+                # At serving tenant counts the per-step compute is deep
+                # enough to hide most of the ring's wire -- the batched
+                # point is where the pipelined schedule pays (section 9).
+                **_overlap_fields(mesh, b, s, tenants=tenants,
+                                  formulation=formulation),
             }
             results.append(rec)
             print(f"[solver-dryrun] batched {mesh_kind} T={tenants} s={s}: "

@@ -45,8 +45,10 @@ def check_sweep_pass():
     report = run_sweep()
     assert report.ok, "\n" + report.summary()
     hlo = next(p for p in report.passes if p.name == "hlo")
-    # 3 formulations x (4 local + 8 sharded + 1 x64 + 6 guard + 4 batched)
-    assert len(hlo.cases) == 69, hlo.cases
+    # 3 ridge-family formulations x (4 local + 8 sharded + 1 x64 + 6 guard
+    # + 4 batched + 6 pipelined + 2 pipelined-batched) = 93, plus the
+    # accelerated formulation (not tenant-batched) at 25.
+    assert len(hlo.cases) == 118, hlo.cases
     assert not hlo.skipped, hlo.skipped
     plan = next(p for p in report.passes if p.name == "plan")
     assert len(plan.cases) >= 11, plan.cases
@@ -127,6 +129,68 @@ def check_mutation_health_guard():
     print("mutation_health_guard OK")
 
 
+def _register_pipelined(form):
+    """Register ``form`` + a PIPELINED solver entry (ring wire), mirroring
+    distributed.py's ca_*_pipelined wrappers."""
+    from repro.core.engine import (SolverPlan, register_formulation,
+                                   register_solver, s_step_solve_sharded)
+
+    def pipelined(mesh, X, y, lam, b, s, iters, key, *, axis="shards",
+                  fuse_packet=True, idx=None, unroll=1, impl=None, tiles=None,
+                  guard=False, fault=None, x0=None, step0=0):
+        plan = SolverPlan(b=b, s=s, impl=impl, tiles=tiles,
+                          fuse_packet=fuse_packet, unroll=unroll,
+                          guard=guard, fault=fault, wire="ring")
+        return s_step_solve_sharded(form, plan, mesh, X, y, lam, iters, key,
+                                    axis=axis, idx=idx, x0=x0, step0=step0)
+
+    register_formulation(form)
+    register_solver(form.name, "pipelined", pipelined)
+
+
+def check_mutation_extra_hop():
+    """A pipelined lowering that sneaks a second reduction -- an UN-DECLARED
+    psum riding the update next to the declared collective-permute ring --
+    must fail the sweep with a message naming the op.  This is the teeth of
+    the wire-schedule declaration: the ring contract pins the KIND, so any
+    all-reduce in a pipelined lowering is flagged even though the same op is
+    legal (and counted) under the psum backend."""
+    from repro.core.engine import PrimalRidge, SolverContracts, _BoundPrimal
+
+    @dataclasses.dataclass(frozen=True)
+    class _ExtraHopBound(_BoundPrimal):
+        def update(self, carry, idx, dx, pp):
+            # The mutation: a monolithic psum next to the declared ring.
+            dx = jax.lax.psum(dx, "shards") / 8.0
+            return super().update(carry, idx, dx, pp)
+
+    class ExtraHopPrimal(PrimalRidge):
+        name = "evil-extra-hop"
+
+        def contracts(self):
+            # Plain contract: no guard/batched cases; the pipelined branch
+            # still runs because the backend entry below is registered.
+            return SolverContracts()
+
+        def bind_shard(self, Xl, yl, lam, *, d, n, x0=None):
+            bound = super().bind_shard(Xl, yl, lam, d=d, n=n, x0=x0)
+            return _ExtraHopBound(**{f.name: getattr(bound, f.name)
+                                     for f in dataclasses.fields(bound)})
+
+    _register_pipelined(ExtraHopPrimal())
+
+    from repro.analysis import run_hlo_pass
+    rep = run_hlo_pass(formulations=["evil-extra-hop"])
+    assert not rep.ok, "sweep failed to catch the extra reduction"
+    kinds = [v for v in rep.violations if v.check == "collective-kind"]
+    assert kinds, rep.violations
+    v = kinds[0]
+    assert "evil-extra-hop/pipelined" in v.subject, v
+    assert "all-reduce" in v.message, v  # names the offending op
+    print("found:", v)
+    print("mutation_extra_hop OK")
+
+
 def check_mutation_pretranspose():
     """The PR-2..4 pre-transpose dual registered as a formulation must fail
     the operand-transpose contract, naming the transpose op."""
@@ -172,8 +236,8 @@ def check_mutation_oversized_tile():
 
 CHECKS = {f.__name__.replace("check_", ""): f for f in
           (check_sweep_pass, check_mutation_second_psum,
-           check_mutation_health_guard, check_mutation_pretranspose,
-           check_mutation_oversized_tile)}
+           check_mutation_health_guard, check_mutation_extra_hop,
+           check_mutation_pretranspose, check_mutation_oversized_tile)}
 
 if __name__ == "__main__":
     CHECKS[sys.argv[1]]()

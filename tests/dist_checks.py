@@ -78,6 +78,91 @@ def check_solver_equivalence():
     print("solver_equivalence OK")
 
 
+def check_pipelined_wire():
+    """The pipelined backend (DESIGN.md section 9) against the psum backend.
+
+    Numerics: the ring decomposition sums each packet chunk along ONE fixed
+    ring chain and broadcasts the result verbatim, so all shards see
+    bit-identical values (replicated-carry consistency) -- but the chain
+    order differs from psum's tree order, so pipelined == psum is an f64
+    allclose ~1e-12 claim, NOT bit-for-bit.  That looseness is inherent to
+    re-associating a float sum and is exactly what the tolerance documents.
+    Checked for every registered formulation, even + ragged iters, single +
+    batched drivers.
+
+    Wire: the lowering must carry exactly ``H * ring_hops(mesh)`` collective
+    -permutes and ZERO all-reduces -- the kind-pinned ``expect_collectives``
+    proves the monolithic psum was replaced, not augmented."""
+    from repro.core import (ca_accelerated_bcd_pipelined,
+                            ca_accelerated_bcd_sharded, ca_bcd_pipelined,
+                            ca_bcd_sharded, ca_bdcd_pipelined,
+                            ca_bdcd_sharded, ca_proximal_bcd_pipelined,
+                            ca_proximal_bcd_sharded, make_solver_mesh,
+                            sample_blocks)
+    from repro.data import SyntheticSpec, make_regression
+    X, y, _ = make_regression(jax.random.key(0),
+                              SyntheticSpec("t", d=60, n=200, cond=1e5))
+    lam = 1e-3
+    mesh = make_solver_mesh(8)
+    pairs = {
+        "primal": (ca_bcd_pipelined, ca_bcd_sharded, 60, 8, {}),
+        "dual": (ca_bdcd_pipelined, ca_bdcd_sharded, 200, 16, {}),
+        "proximal": (ca_proximal_bcd_pipelined, ca_proximal_bcd_sharded,
+                     60, 8, {"lam1": 1e-3}),
+        "accelerated": (ca_accelerated_bcd_pipelined,
+                        ca_accelerated_bcd_sharded, 60, 8, {"beta": 0.5}),
+    }
+    for iters in (64, 30):                       # even and ragged tails
+        for name, (ring, psum, dim, b, kw) in pairs.items():
+            idx = sample_blocks(jax.random.key(1), dim, b, iters)
+            s = 8 if dim == 60 else 4
+            w_r, al_r = ring(mesh, X, y, lam, b, s, iters, None, idx=idx, **kw)
+            w_p, al_p = psum(mesh, X, y, lam, b, s, iters, None, idx=idx, **kw)
+            np.testing.assert_allclose(w_r, w_p, rtol=1e-12, atol=1e-14)
+            np.testing.assert_allclose(al_r, al_p, rtol=1e-12, atol=1e-14)
+    print("  single-solve equivalence ok (4 formulations, even+ragged)")
+
+    # batched tenants ride the SAME decomposed reduction
+    from repro.core import SolverPlan, TenantBatch, s_step_solve_batched_sharded
+    from repro.core.engine import PrimalRidge
+    T, d, n, b, s, iters = 5, 60, 200, 4, 2, 6
+    ys = jnp.stack([jax.random.normal(k, (n,), X.dtype)
+                    for k in jax.random.split(jax.random.key(3), T)])
+    batch = TenantBatch(ys=ys, lams=jnp.full((T,), lam, X.dtype))
+    idxb = sample_blocks(jax.random.key(4), d, b, iters)
+    r_p = s_step_solve_batched_sharded(
+        PrimalRidge(), SolverPlan(b=b, s=s, tenants=T), mesh, X, batch,
+        iters, None, idx=idxb)
+    r_r = s_step_solve_batched_sharded(
+        PrimalRidge(), SolverPlan(b=b, s=s, tenants=T, wire="ring"), mesh, X,
+        batch, iters, None, idx=idxb)
+    np.testing.assert_allclose(r_r.ws, r_p.ws, rtol=1e-12, atol=1e-14)
+    np.testing.assert_allclose(r_r.alphas, r_p.alphas, rtol=1e-12, atol=1e-14)
+    print("  batched equivalence ok")
+
+    # the declared wire schedule, machine-counted (kind-pinned): exactly
+    # H * ring_hops collective-permutes, zero all-reduces, guard included
+    from repro.analysis import expect_collectives
+    from repro.core.distributed import lower_solver, lower_solver_batched
+    from repro.core.engine import ring_hops
+    hops = ring_hops((8,))                       # 2P - 2 = 14 on the 1D mesh
+    for iters, H in ((16, 2), (12, 2)):          # 12 % 8 -> ragged H = 2
+        comp = lower_solver(ca_bcd_pipelined, mesh, 64, 256, lam, 8, 8,
+                            iters, unroll=max(iters // 8, 1))
+        expect_collectives(comp, H * hops, kinds=("collective-permute",),
+                           subject=f"pipelined primal[iters={iters}]")
+    comp = lower_solver("accelerated", mesh, 64, 256, lam, 8, 8, 16,
+                        unroll=2, backend="pipelined", beta=0.5, guard=True)
+    expect_collectives(comp, 2 * hops, kinds=("collective-permute",),
+                       subject="pipelined accelerated[guard]")
+    comp = lower_solver_batched("primal", mesh, 64, 256, 8, 4, 2, 4,
+                                unroll=2, wire="ring")
+    expect_collectives(comp, 2 * hops, kinds=("collective-permute",),
+                       subject="pipelined batched[T=8]")
+    print("  wire schedule ok: H *", hops, "collective-permutes, 0 psum")
+    print("pipelined_wire OK")
+
+
 def check_collective_counts():
     """The paper's latency claim, measured: #collectives drops by exactly s.
 
@@ -261,9 +346,10 @@ def check_elastic_reshard():
 
 
 CHECKS = {f.__name__.replace("check_", ""): f for f in
-          (check_solver_equivalence, check_collective_counts,
-           check_collective_counts_pallas, check_batched_collectives,
-           check_flash_decode, check_elastic_reshard)}
+          (check_solver_equivalence, check_pipelined_wire,
+           check_collective_counts, check_collective_counts_pallas,
+           check_batched_collectives, check_flash_decode,
+           check_elastic_reshard)}
 
 if __name__ == "__main__":
     CHECKS[sys.argv[1]]()

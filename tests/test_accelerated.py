@@ -1,0 +1,142 @@
+"""Registry-level tests for the accelerated (momentum) formulation
+(arXiv:1711.05305) -- the satellite of the pipelined-wire PR.
+
+Covers the acceptance criteria:
+  * ``beta=0`` reproduces the primal ridge iterates BIT-FOR-BIT through
+    ``get_solver`` (static branch: the momentum update lowers to the primal
+    update itself), s=1 and s>1, even + ragged schedules;
+  * s=1 matches a hand-rolled classical heavy-ball BCD oracle (momentum
+    applied per block, shared no code with the engine);
+  * s>1 applies momentum to the DEFERRED updates (the CoCoA-style local-
+    subproblem semantics the formulation documents -- NOT an exact
+    reordering of the s=1 schedule) and still reaches the ridge optimum;
+  * momentum at beta in (0, 1) still converges to the ridge optimum (the
+    velocity is a convergence accelerant, not a different fixed point);
+  * beta outside [0, 1) fails fast;
+  * the registry carries all three backends.
+(The sharded + pipelined equivalences run on the 8-device subprocess in
+tests/dist_checks.py.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (accelerated_bcd, ca_accelerated_bcd, get_solver,
+                        objective, ridge_exact, sample_blocks)
+from repro.core.accelerated import MomentumWrapper
+
+from _x64 import x64_mode  # noqa: F401  (autouse fixture)
+
+LAM = 1e-3
+
+
+@pytest.fixture(scope="module")
+def problem():
+    jax.config.update("jax_enable_x64", True)  # before data gen
+    from repro.data import SyntheticSpec, make_regression
+    X, y, _ = make_regression(jax.random.key(0),
+                              SyntheticSpec("t", d=40, n=120, cond=1e4))
+    return X, y
+
+
+# --------------------------------------------------------------------------
+# beta = 0 IS the primal ridge, bit-for-bit, through the registry
+# --------------------------------------------------------------------------
+
+def test_beta_zero_is_primal_bit_for_bit(problem):
+    X, y = problem
+    acc = get_solver("accelerated", "local")
+    ridge = get_solver("primal", "local")
+    for iters, s in ((20, 1), (20, 4), (21, 4)):       # classical, CA, ragged
+        idx = sample_blocks(jax.random.key(1), X.shape[0], 4, iters)
+        r_a = acc(X, y, LAM, 4, s, iters, None, idx=idx, beta=0.0)
+        r_p = ridge(X, y, LAM, 4, s, iters, None, idx=idx)
+        assert np.array_equal(np.asarray(r_a.w), np.asarray(r_p.w)), (iters, s)
+        assert np.array_equal(np.asarray(r_a.alpha), np.asarray(r_p.alpha))
+
+
+# --------------------------------------------------------------------------
+# s=1 == a hand-rolled classical heavy-ball BCD oracle
+# --------------------------------------------------------------------------
+
+def _momentum_bcd_reference(X, y, lam, beta, b, iters, idx):
+    """Classical heavy-ball BCD: materialized panel, explicit solve, velocity
+    applied per block.  Deliberately shares no code with the engine path."""
+    d, n = X.shape
+    w = jnp.zeros((d,), X.dtype)
+    alpha = jnp.zeros((n,), X.dtype)
+    v = jnp.zeros((d,), X.dtype)
+    for h in range(iters):
+        i = idx[h]
+        Y = X[i, :]
+        Gamma = Y @ Y.T / n + lam * jnp.eye(b, dtype=X.dtype)
+        r = Y @ (y - alpha) / n - lam * w[i]
+        dx = jnp.linalg.solve(Gamma, r)
+        vi = beta * v[i] + dx
+        v = v.at[i].set(vi)
+        w = w.at[i].add(vi)
+        alpha = alpha + Y.T @ vi
+    return w, alpha
+
+
+@pytest.mark.parametrize("iters", [24, 25])
+def test_s1_is_classical_heavy_ball(problem, iters):
+    X, y = problem
+    idx = sample_blocks(jax.random.key(2), X.shape[0], 4, iters)
+    res = accelerated_bcd(X, y, LAM, 4, iters, None, idx=idx, beta=0.7)
+    w_ref, al_ref = _momentum_bcd_reference(X, y, LAM, 0.7, 4, iters, idx)
+    np.testing.assert_allclose(res.w, w_ref, rtol=0, atol=1e-12)
+    np.testing.assert_allclose(res.alpha, al_ref, rtol=0, atol=1e-12)
+
+
+# --------------------------------------------------------------------------
+# momentum converges to the ridge optimum (same fixed point)
+# --------------------------------------------------------------------------
+
+def test_momentum_converges_to_ridge_optimum(problem):
+    X, y = problem
+    w_star = ridge_exact(X, y, LAM)
+    o_star = float(objective(X, w_star, y, LAM))
+    for s in (1, 4):                    # classical and deferred-update paths
+        r = ca_accelerated_bcd(X, y, LAM, 4, s, 400, jax.random.key(3),
+                               beta=0.5)
+        gap = float(objective(X, r.w, y, LAM)) - o_star
+        assert -1e-12 <= gap < 1e-6, (s, gap)
+
+
+def test_velocity_is_carry_state_not_output(problem):
+    """The solve returns the standard (w, alpha) result shape -- the
+    velocity stays in the scan carry and is dropped by the finalizer."""
+    X, y = problem
+    r = ca_accelerated_bcd(X, y, LAM, 4, 2, 8, jax.random.key(4), beta=0.9)
+    assert r.w.shape == (X.shape[0],)
+    assert r.alpha.shape == (X.shape[1],)
+    assert jnp.all(jnp.isfinite(r.w))
+
+
+# --------------------------------------------------------------------------
+# validation + registry coverage
+# --------------------------------------------------------------------------
+
+def test_bad_beta_fails_fast():
+    with pytest.raises(ValueError, match="beta"):
+        MomentumWrapper(beta=1.0)
+    with pytest.raises(ValueError, match="beta"):
+        MomentumWrapper(beta=-0.1)
+
+
+def test_registered_on_all_backends():
+    from repro.core import registered_solvers
+    backends = {b for (name, b) in registered_solvers()
+                if name == "accelerated"}
+    assert backends == {"local", "sharded", "pipelined"}, backends
+
+
+def test_contract_declares_momentum_lowering():
+    """The analysis sweep must lower the beta>0 path, not the beta=0 primal
+    branch -- the contract pins that via lowering_kwargs."""
+    c = MomentumWrapper().contracts()
+    assert ("beta", 0.5) in c.lowering_kwargs
+    assert c.sync_per_outer == 1
+    assert c.pipelined_collective_kinds == ("collective-permute",)

@@ -51,6 +51,12 @@ def test_mutation_health_guard_caught():
     _run("mutation_health_guard")
 
 
+def test_mutation_extra_hop_caught():
+    """A pipelined lowering sneaking an un-declared psum next to its
+    declared collective-permute ring must fail the sweep, naming the op."""
+    _run("mutation_extra_hop")
+
+
 def test_mutation_pretranspose_caught():
     _run("mutation_pretranspose")
 

@@ -27,6 +27,13 @@ def test_distributed_solver_equivalence():
     _run("solver_equivalence")
 
 
+def test_pipelined_wire_schedule():
+    """Pipelined backend == psum backend to f64 ~1e-12 (reduction order
+    differs, so not bit-for-bit) for every registered formulation, single +
+    batched, with the declared collective-permute ring machine-counted."""
+    _run("pipelined_wire")
+
+
 def test_collective_count_reduction_by_s():
     _run("collective_counts")
 

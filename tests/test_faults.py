@@ -218,6 +218,12 @@ def test_sharded_fault_matrix():
     _run("fault_matrix_sharded")
 
 
+def test_pipelined_fault_parity():
+    """Guard trips under the pipelined ring wire degrade identically to the
+    psum backend: same reason bits, same trip step, same s=1 tail."""
+    _run("fault_parity_pipelined")
+
+
 def test_supervised_elastic_resume_sharded():
     """The acceptance gate: injected device loss, resume on a smaller mesh
     from the newest snapshot, f64 objective matches the uninterrupted solve
